@@ -1,0 +1,36 @@
+"""Shared benchmark plumbing: timing + CSV emission.
+
+CPU timings here measure the ALGORITHMIC gap (SPARTan vs. materialized-KRP
+baseline) on geometry-preserving shrinks of the paper's datasets; the TPU
+story is carried by the dry-run roofline terms (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+
+__all__ = ["time_call", "emit"]
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+              **kwargs) -> Tuple[float, object]:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,41 @@
+"""Paper Figure 5 — time/iteration vs target rank on CHOA-shaped and
+MovieLens-shaped data (geometry-preserving shrinks), SPARTan vs baseline."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Parafac2Options, bucketize, init_state
+from repro.core.parafac2 import als_step
+from repro.core.baseline import baseline_als_step
+from repro.data import choa_like, movielens_like
+from benchmarks.common import emit, time_call
+
+
+def run(dataset: str, data, ranks=(5, 10, 20, 40), iters: int = 3) -> None:
+    bt = bucketize(data, max_buckets=4, dtype=jnp.float32)
+    for R in ranks:
+        opts = Parafac2Options(rank=R, nonneg=True)
+        state = init_state(bt, opts, seed=0)
+        sp = jax.jit(lambda s: als_step(bt, s, opts))
+        bl = jax.jit(lambda s: baseline_als_step(bt, s, opts))
+        t_sp, _ = time_call(sp, state, iters=iters)
+        t_bl, _ = time_call(bl, state, iters=iters)
+        emit(f"fig5/{dataset}/spartan/R{R}", t_sp, f"speedup={t_bl/t_sp:.2f}x")
+        emit(f"fig5/{dataset}/baseline/R{R}", t_bl, "")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--choa-scale", type=float, default=0.002)
+    ap.add_argument("--ml-scale", type=float, default=0.01)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+    run("choa", choa_like(scale=args.choa_scale, seed=0), iters=args.iters)
+    run("movielens", movielens_like(scale=args.ml_scale, seed=0), iters=args.iters)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Figure 6 — CHOA: time/iteration vs number of subjects K, fixed rank
+R in {10, 40}."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Parafac2Options, bucketize, init_state
+from repro.core.parafac2 import als_step
+from repro.core.baseline import baseline_als_step
+from repro.data import choa_like
+from benchmarks.common import emit, time_call
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scales", type=float, nargs="*",
+                    default=[0.0005, 0.001, 0.002, 0.004])
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+    for scale in args.scales:
+        data = choa_like(scale=scale, seed=0)
+        bt = bucketize(data, max_buckets=4, dtype=jnp.float32)
+        for R in (10, 40):
+            opts = Parafac2Options(rank=R, nonneg=True)
+            state = init_state(bt, opts, seed=0)
+            sp = jax.jit(lambda s: als_step(bt, s, opts))
+            bl = jax.jit(lambda s: baseline_als_step(bt, s, opts))
+            t_sp, _ = time_call(sp, state, iters=args.iters)
+            t_bl, _ = time_call(bl, state, iters=args.iters)
+            emit(f"fig6/choa/spartan/K{data.n_subjects}/R{R}", t_sp,
+                 f"speedup={t_bl/t_sp:.2f}x")
+            emit(f"fig6/choa/baseline/K{data.n_subjects}/R{R}", t_bl, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Figure 7 — MovieLens: time/iteration vs number of variables J, fixed
+rank R in {10, 40}. J is varied by keeping the most popular J columns."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Parafac2Options, bucketize, init_state
+from repro.core.parafac2 import als_step
+from repro.core.baseline import baseline_als_step
+from repro.data import movielens_like
+from repro.sparse.coo import IrregularCOO, SubjectCOO
+from benchmarks.common import emit, time_call
+
+
+def restrict_columns(data: IrregularCOO, J_keep: int) -> IrregularCOO:
+    """Keep the J_keep most frequent columns, remap ids, drop empty rows."""
+    counts = np.zeros(data.n_cols, np.int64)
+    for s in data.subjects:
+        np.add.at(counts, s.cols, 1)
+    keep = np.argsort(-counts)[:J_keep]
+    remap = -np.ones(data.n_cols, np.int64)
+    remap[keep] = np.arange(J_keep)
+    subs = []
+    for s in data.subjects:
+        m = remap[s.cols] >= 0
+        if not m.any():
+            continue
+        rows, cols, vals = s.rows[m], remap[s.cols[m]].astype(np.int32), s.vals[m]
+        # re-pack rows (paper: all-zero rows are filtered)
+        uniq, rr = np.unique(rows, return_inverse=True)
+        subs.append(SubjectCOO(rows=rr.astype(np.int32), cols=cols, vals=vals,
+                               n_rows=uniq.size, n_cols=J_keep))
+    return IrregularCOO(subjects=subs, n_cols=J_keep)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--j-levels", type=int, nargs="*",
+                    default=[2_000, 5_000, 10_000, 26_096])
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+    full = movielens_like(scale=args.scale, seed=0)
+    for J in args.j_levels:
+        data = restrict_columns(full, min(J, full.n_cols))
+        bt = bucketize(data, max_buckets=4, dtype=jnp.float32)
+        for R in (10, 40):
+            opts = Parafac2Options(rank=R, nonneg=True)
+            state = init_state(bt, opts, seed=0)
+            sp = jax.jit(lambda s: als_step(bt, s, opts))
+            bl = jax.jit(lambda s: baseline_als_step(bt, s, opts))
+            t_sp, _ = time_call(sp, state, iters=args.iters)
+            t_bl, _ = time_call(bl, state, iters=args.iters)
+            emit(f"fig7/movielens/spartan/J{data.n_cols}/R{R}", t_sp,
+                 f"speedup={t_bl/t_sp:.2f}x")
+            emit(f"fig7/movielens/baseline/J{data.n_cols}/R{R}", t_bl, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Render the §Roofline table from the dry-run JSON (results/dryrun.json)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+
+
+def fmt_t(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.2f}ms"
+
+
+def render(path: str, mesh: str = "pod16x16", markdown: bool = True) -> str:
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, r in sorted(results.items()):
+        if key.startswith("_") or r.get("mesh") != mesh:
+            continue
+        if "t_compute" not in r:
+            continue
+        rows.append(r)
+    hdr = ("| arch | shape | t_compute | t_memory(live) | t_memory(hlo-ub) | "
+           "t_collective | bottleneck | GiB/dev | fits 16G | MODEL/HLO flops | roofline frac |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(r.get('t_compute'))} | "
+            f"{fmt_t(r.get('t_memory'))} | {fmt_t(r.get('t_memory_hlo'))} | "
+            f"{fmt_t(r.get('t_collective'))} | {r.get('bottleneck','-')[2:]} | "
+            f"{r.get('bytes_per_device',0)/2**30:.2f} | "
+            f"{'Y' if r.get('fits_hbm_16g') else 'N'} | "
+            f"{r.get('useful_fraction',0):.2f} | "
+            f"{r.get('roofline_fraction_compute',0):.2f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=os.path.normpath(DEFAULT))
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args(argv)
+    print(render(args.path, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

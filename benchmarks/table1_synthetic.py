@@ -1,0 +1,57 @@
+"""Paper Table 1 — synthetic scaling: one PARAFAC2 iteration, SPARTan vs the
+materialized-Y + KRP baseline, for increasing nnz at R in {10, 40}.
+
+Geometry-preserving shrink of the paper's setup (1M subjects x 5K vars x <=100
+obs, 63-500M nnz): subjects scaled by --scale, variables 5000 -> 500,
+max obs 100 -> 50; the four nnz columns scale the per-subject density the same
+way the paper's sparsification levels do. OoM in the paper corresponds here to
+the baseline's dense Y (R x J x K) blow-up — reported as the Y-bytes column.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Parafac2Options, bucketize, init_state
+from repro.core.parafac2 import als_step
+from repro.core.baseline import baseline_als_step
+from repro.sparse import random_irregular
+from benchmarks.common import emit, time_call
+
+NNZ_LEVELS = (0.125, 0.25, 0.5, 1.0)   # mirrors 63 / 125 / 250 / 500 M
+
+
+def run(scale: float = 0.002, ranks=(10, 40), iters: int = 3) -> None:
+    K = max(64, int(1_000_000 * scale))
+    J = 500
+    for level in NNZ_LEVELS:
+        data = random_irregular(
+            n_subjects=K, n_cols=J, max_rows=50,
+            avg_nnz_per_subject=250 * level, seed=17)
+        bt = bucketize(data, max_buckets=4, dtype=jnp.float32)
+        for R in ranks:
+            opts = Parafac2Options(rank=R, nonneg=True)
+            state = init_state(bt, opts, seed=0)
+            sp = jax.jit(lambda s: als_step(bt, s, opts))
+            bl = jax.jit(lambda s: baseline_als_step(bt, s, opts))
+            t_sp, _ = time_call(sp, state, iters=iters)
+            t_bl, _ = time_call(bl, state, iters=iters)
+            y_bytes = 4 * R * J * K
+            emit(f"table1/spartan/nnz{data.nnz}/R{R}", t_sp,
+                 f"speedup={t_bl / t_sp:.2f}x")
+            emit(f"table1/baseline/nnz{data.nnz}/R{R}", t_bl,
+                 f"dense_Y_bytes={y_bytes}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.002)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+    run(scale=args.scale, iters=args.iters)
+
+
+if __name__ == "__main__":
+    main()

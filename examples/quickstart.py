@@ -1,0 +1,39 @@
+"""Quickstart: fit a PARAFAC2 model to a synthetic irregular tensor and
+recover its planted structure.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.sparse import random_parafac2
+from repro.core import Parafac2Options, bucketize, fit, reconstruct_uk
+
+
+def main():
+    # 1) make an irregular dataset from a planted rank-4 PARAFAC2 model
+    data, truth = random_parafac2(
+        n_subjects=50, n_cols=60, max_rows=40, rank=4, density=0.8, seed=7)
+    print(f"K={data.n_subjects} subjects, J={data.n_cols} variables, "
+          f"nnz={data.nnz}")
+
+    # 2) pack ragged subjects into static-shape buckets (the TPU-native CC format)
+    bucketed = bucketize(data, max_buckets=3)
+
+    # 3) fit
+    opts = Parafac2Options(rank=4, nonneg=True)
+    state, history = fit(bucketed, opts, max_iters=60, tol=1e-7, verbose=False)
+    print(f"fit after {len(history)} iterations: {history[-1]:.4f}")
+    assert history[-1] > 0.5
+
+    # 4) inspect the factors
+    print("V (variable loadings) shape:", np.asarray(state.V).shape)
+    print("W (subject importances) shape:", np.asarray(state.W).shape)
+    uks = reconstruct_uk(bucketed, state, opts)
+    print("U_0 (temporal signature of subject 0) shape:", uks[0].shape)
+    print("PARAFAC2 invariant: U_k^T U_k constant across subjects ->",
+          np.allclose(uks[0].T @ uks[0], uks[1].T @ uks[1], atol=1e-2))
+
+
+if __name__ == "__main__":
+    main()

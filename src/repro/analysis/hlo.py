@@ -1,0 +1,81 @@
+"""Lightweight HLO-text parser: collective-communication byte accounting.
+
+cost_analysis() has no collective term, so we parse the (post-SPMD) HLO from
+``compiled.as_text()``: build a symbol table of instruction result shapes,
+then for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute sum the *operand* byte sizes (bytes each device injects
+into the interconnect for that op).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+__all__ = ["collective_bytes", "parse_collectives", "shape_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = f32[1,2,3]{...} op-name(...)` (also tuple results `(f32[..], ...)`)
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?)([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> List[Tuple[str, int]]:
+    """Returns [(op_kind, operand_bytes)] per collective instruction."""
+    shapes: Dict[str, int] = {}
+    results: List[Tuple[str, int]] = []
+    for line in hlo_text.splitlines():
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, is_tuple, dtype, dims = m.groups()
+        if is_tuple:
+            # tuple result: sum all shape literals before the op name
+            header = line.split("=", 1)[1]
+            header = header.split(")", 1)[0]
+            total = sum(shape_bytes(dt, dm)
+                        for dt, dm in re.findall(r"([a-z0-9]+)\[([0-9,]*)\]", header))
+            shapes[name] = total
+        else:
+            shapes[name] = shape_bytes(dtype, dims)
+        body = line.split("=", 1)[1]
+        for op in _COLLECTIVES:
+            # match the op at the start of the instruction body (after shapes)
+            if re.search(rf"\b{op}(?:-start|-done)?\(", body):
+                if f"{op}-done" in body:
+                    continue  # async pair: bytes counted at -start
+                args = body.split("(", 1)[1]
+                operand_names = _OPERAND.findall(args.split("),", 1)[0])
+                obytes = sum(shapes.get(a, 0) for a in operand_names)
+                if obytes == 0:
+                    # operands may be literal-shaped (e.g. `all-gather(f32[2] %x)`)
+                    obytes = sum(shape_bytes(dt, dm) for dt, dm in
+                                 re.findall(r"([a-z0-9]+)\[([0-9,]*)\]", args))
+                results.append((op, obytes))
+                break
+    return results
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Total operand bytes per collective kind + 'total'."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for op, b in parse_collectives(hlo_text):
+        out[op] += b
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out

@@ -1,0 +1,106 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs_per_device   / peak_FLOP/s_per_chip
+    memory term     = HLO_bytes_per_device   / HBM_bw_per_chip
+    collective term = collective_bytes_per_device / link_bw_per_chip
+
+cost_analysis() of an SPMD-partitioned module reports the *per-device*
+program (verified by `calibrate_flops_convention`), so chips appear in the
+denominator implicitly. MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) is
+the useful-work yardstick; MODEL/HLO ratio flags remat & redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.analysis.hlo import collective_bytes
+
+__all__ = ["HW", "TPU_V5E", "roofline_terms", "model_flops", "calibrate_flops_convention"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float      # per chip, bf16
+    hbm_bw: float          # bytes/s per chip
+    link_bw: float         # bytes/s per ICI link
+
+
+TPU_V5E = HW(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
+
+
+def _cost_get(cost: Any, key: str) -> float:
+    if isinstance(cost, dict):
+        return float(cost.get(key, 0.0))
+    if isinstance(cost, (list, tuple)) and cost:
+        return _cost_get(cost[0], key)
+    return 0.0
+
+
+def roofline_terms(compiled, *, hw: HW = TPU_V5E,
+                   hlo_text: Optional[str] = None) -> Dict[str, float]:
+    """Three roofline terms (seconds) + raw counters from a compiled module."""
+    cost = compiled.cost_analysis()
+    flops = _cost_get(cost, "flops")
+    bytes_accessed = _cost_get(cost, "bytes accessed")
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    terms = {
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_accessed,
+        "collective_bytes": float(coll["total"]),
+        "collective_breakdown": {k: v for k, v in coll.items() if k != "total"},
+        "t_compute": flops / hw.peak_flops,
+        "t_memory": bytes_accessed / hw.hbm_bw,
+        "t_collective": coll["total"] / hw.link_bw,
+    }
+    dominant = max(("t_compute", "t_memory", "t_collective"), key=lambda k: terms[k])
+    terms["bottleneck"] = dominant
+    tmax = terms[dominant]
+    # roofline fraction: useful ceiling / achievable step time if perfectly
+    # overlapped (bounded by the dominant term)
+    terms["roofline_fraction_compute"] = (
+        terms["t_compute"] / tmax if tmax > 0 else 0.0)
+    return terms
+
+
+def model_flops(cfg, shape, *, per_device: bool = True, n_chips: int = 1) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE) for a train step; 2*N*D for a
+    forward-only (prefill) step; 2*N_active per token for decode."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_chips if per_device else total
+
+
+def calibrate_flops_convention(mesh) -> str:
+    """Empirically decide whether cost_analysis flops are per-device or global
+    for SPMD modules (JAX version dependent). Returns 'per_device'|'global'."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def f(a):
+        return a @ a
+
+    sharded = jax.jit(
+        f, in_shardings=NamedSharding(mesh, P(mesh.axis_names[0], None))
+    ).lower(x).compile()
+    local = jax.jit(f).lower(x).compile()
+    fs = _cost_get(sharded.cost_analysis(), "flops")
+    fl = _cost_get(local.cost_analysis(), "flops")
+    if fs <= 0 or fl <= 0:
+        return "unknown"
+    return "per_device" if fs < 0.75 * fl else "global"

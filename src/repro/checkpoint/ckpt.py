@@ -1,0 +1,128 @@
+"""Checkpointing: atomic, step-stamped, elastic-restorable.
+
+Layout:  <dir>/step_000123/
+             meta.json           step, flat key list, extra state (data iter)
+             <flat-key>.npy      one array per param/opt leaf (globally
+                                 unsharded values — any future mesh can load)
+         <dir>/step_000123.tmp-* staging dir, atomically renamed on success
+
+Elasticity: arrays are stored as *global* (fully addressable) values; on load
+they are re-sharded by whatever sharding rules the new mesh applies. A resume
+on 64 chips of a checkpoint written on 512 therefore needs no conversion.
+Partial/corrupt checkpoints are never visible (atomic rename), and
+``latest_step`` skips damaged directories (crash-during-save tolerance).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "all_steps"]
+
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, tree: Any, *, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Atomically write a checkpoint; prune to the newest `keep`."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    staging = tempfile.mkdtemp(prefix=f"step_{step:09d}.tmp-", dir=directory)
+    flat = _flatten(tree)
+    dtypes = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes[key] = arr.dtype.name
+        if arr.dtype.name == "bfloat16":   # numpy can't serialize bf16
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(staging, f"{abs(hash(key)) % 10**12:012d}.npy"), arr)
+    meta = {
+        "step": step,
+        "keys": {key: f"{abs(hash(key)) % 10**12:012d}.npy" for key in flat},
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    with open(os.path.join(staging, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(staging, final)
+    # prune old checkpoints
+    steps = all_steps(directory)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"), ignore_errors=True)
+    return final
+
+
+def all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp" not in name:
+            path = os.path.join(directory, name, "meta.json")
+            if os.path.exists(path):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of `tree_like`; apply `shardings` if given
+    (elastic re-shard happens here via jax.device_put)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    base = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(base, "meta.json")) as f:
+        meta = json.load(f)
+    flat_keys = _flatten(tree_like)
+    leaves_by_key = {}
+    for key in flat_keys:
+        fname = meta["keys"].get(key)
+        if fname is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(base, fname))
+        if meta.get("dtypes", {}).get(key) == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        leaves_by_key[key] = arr
+
+    flat_shard = _flatten(shardings) if shardings is not None else None
+
+    def rebuild(path, leaf):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = leaves_by_key[key]
+        want_dtype = getattr(leaf, "dtype", None)
+        if want_dtype is not None:
+            arr = arr.astype(want_dtype)
+        if flat_shard is not None:
+            return jax.device_put(arr, flat_shard[key])
+        return jax.numpy.asarray(arr)
+
+    restored = jax.tree_util.tree_map_with_path(rebuild, tree_like)
+    return restored, int(meta["step"]), meta.get("extra", {})

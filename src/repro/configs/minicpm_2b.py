@@ -1,0 +1,13 @@
+"""minicpm-2b [dense] — llama-like arch, trained with WSD (arXiv:2404.06395)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122753,
+)

@@ -1,0 +1,25 @@
+"""Paper core: PARAFAC2 + SPARTan MTTKRP on bucketed compressed-column data."""
+from repro.core.irregular import Bucket, Bucketed, BlockBucket, bucketize, to_block_bucket, LANE
+from repro.core.parafac2 import (
+    Parafac2Options,
+    Parafac2State,
+    als_step,
+    fit,
+    init_state,
+    reconstruct_uk,
+)
+
+__all__ = [
+    "Bucket",
+    "Bucketed",
+    "BlockBucket",
+    "bucketize",
+    "to_block_bucket",
+    "LANE",
+    "Parafac2Options",
+    "Parafac2State",
+    "als_step",
+    "fit",
+    "init_state",
+    "reconstruct_uk",
+]

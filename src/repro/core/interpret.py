@@ -1,0 +1,51 @@
+"""Model interpretation helpers — the paper's Section 5.3 workflow.
+
+* V columns      -> phenotype definitions (feature memberships)
+* diag(S_k)=W[k] -> per-subject phenotype importance (sortable)
+* U_k columns    -> per-subject temporal signatures (evolution over I_k steps)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["top_phenotype_features", "subject_top_phenotypes", "temporal_signature"]
+
+
+def top_phenotype_features(
+    V: np.ndarray, feature_names: Optional[Sequence[str]] = None, top: int = 10
+) -> List[List[Tuple[str, float]]]:
+    """For each phenotype r, the top features by weight in V(:, r)."""
+    V = np.asarray(V)
+    J, R = V.shape
+    names = list(feature_names) if feature_names is not None else [f"feat_{j}" for j in range(J)]
+    out = []
+    for r in range(R):
+        col = V[:, r]
+        idx = np.argsort(-col)[:top]
+        out.append([(names[j], float(col[j])) for j in idx if col[j] > 0])
+    return out
+
+
+def subject_top_phenotypes(W: np.ndarray, k: int, top: int = 2) -> List[Tuple[int, float]]:
+    """Most relevant phenotypes for subject k by importance diag(S_k) = W[k,:]."""
+    w = np.asarray(W)[k]
+    idx = np.argsort(-w)[:top]
+    return [(int(r), float(w[r])) for r in idx]
+
+
+def temporal_signature(
+    Uk: np.ndarray, phenotypes: Sequence[int], clip_nonneg: bool = True
+) -> Dict[int, np.ndarray]:
+    """Temporal evolution of selected phenotypes for one subject.
+
+    Per the paper: only non-negative elements of the signature are interpreted
+    (X_k, S_k, V are all non-negative under the constrained model).
+    """
+    Uk = np.asarray(Uk)
+    out = {}
+    for r in phenotypes:
+        sig = Uk[:, r]
+        out[int(r)] = np.maximum(sig, 0.0) if clip_nonneg else sig
+    return out

@@ -1,0 +1,288 @@
+"""Device-side irregular-tensor formats.
+
+Two formats, both static-shape (XLA) and bucketed (see repro.sparse.bucketing):
+
+* **CC (compressed columns)** — each subject slice X_k (I_k x J) is stored
+  *dense over its nonzero columns*: ``vals[k] in R^{I_pad x C_pad}`` plus the
+  global column ids ``cols[k] in {0..J-1}^{C_pad}``. This is the functional
+  format for all SPARTan math: every identity in the paper becomes a gather
+  of V-rows plus a small dense matmul (MXU-shaped).
+
+* **BCC (block-compressed columns)** — same idea with column indices quantized
+  to 128-wide blocks of J; this is the Pallas-kernel format (scalar-prefetch
+  block gathers). Conversion CC -> BCC is provided.
+
+A :class:`Bucketed` value is a pytree (dict of buckets) usable under jit/pjit;
+subjects shard along the leading Kb axis of every per-bucket array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.coo import IrregularCOO
+from repro.sparse.bucketing import BucketPlan, plan_buckets
+
+__all__ = ["Bucket", "Bucketed", "bucketize", "LANE"]
+
+LANE = 128  # TPU lane width; BCC column-block quantum
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One static-shape bucket of subjects in CC format.
+
+    vals:        f[Kb, I_pad, C_pad]  dense values over kept columns
+    cols:        i32[Kb, C_pad]       global column id per kept column (pad: 0)
+    col_mask:    f[Kb, C_pad]         1.0 for real kept columns, 0.0 for padding
+    subject_ids: i32[Kb]              global subject index (row into W)
+    subject_mask:f[Kb]                1.0 real subject, 0.0 padding subject
+    row_counts:  i32[Kb]              true I_k (informational; padded rows are 0)
+    """
+
+    vals: jax.Array
+    cols: jax.Array
+    col_mask: jax.Array
+    subject_ids: jax.Array
+    subject_mask: jax.Array
+    row_counts: jax.Array
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        children = (
+            self.vals,
+            self.cols,
+            self.col_mask,
+            self.subject_ids,
+            self.subject_mask,
+            self.row_counts,
+        )
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- shape helpers -----------------------------------------------------
+    @property
+    def kb(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def i_pad(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def c_pad(self) -> int:
+        return self.vals.shape[2]
+
+    # -- core contractions (all batched over Kb) ----------------------------
+    def gather_v(self, V: jax.Array) -> jax.Array:
+        """V-rows for this bucket's kept columns: [Kb, C_pad, R] (pad rows 0)."""
+        Vg = jnp.take(V, self.cols, axis=0)  # [Kb, C_pad, R]
+        return Vg * self.col_mask[..., None]
+
+    def xk_times_v(self, V: jax.Array, Vg: Optional[jax.Array] = None) -> jax.Array:
+        """X_k V for every subject: [Kb, I_pad, R]. The paper's column-sparsity
+        exploitation: only V rows of kept columns participate."""
+        if Vg is None:
+            Vg = self.gather_v(V)
+        return jnp.einsum("kic,kcr->kir", self.vals, Vg, preferred_element_type=self.vals.dtype)
+
+    def xk_times_v_bcc(self, bcc: "BlockBucket", V: jax.Array) -> jax.Array:
+        """X_k V through the Pallas BCC scalar-prefetch kernel (TPU path;
+        interpret=True off-TPU). V is zero-padded to a LANE multiple."""
+        from repro.kernels import ops
+
+        J, R = V.shape
+        J_pad = ((J + LANE - 1) // LANE) * LANE
+        V_pad = jnp.zeros((J_pad, R), V.dtype).at[:J].set(V) if J_pad != J else V
+        return ops.gather_matmul(bcc.vals, bcc.blk_ids, V_pad).astype(self.vals.dtype)
+
+    def project(self, Q: jax.Array) -> jax.Array:
+        """Y_k = Q_k^T X_k in CC format: [Kb, R, C_pad]; shares self.cols.
+
+        This is the paper's key structural observation: Y_k inherits exactly
+        the column-sparsity pattern of X_k.
+        """
+        return jnp.einsum("kir,kic->krc", Q, self.vals, preferred_element_type=self.vals.dtype)
+
+    def scatter_cols_to_dense(self, compact: jax.Array, J: int) -> jax.Array:
+        """Expand a CC matrix [Kb, *, C_pad] back to dense [Kb, *, J] (tests)."""
+        Kb, mid, Cp = compact.shape
+        out = jnp.zeros((Kb, mid, J), compact.dtype)
+        k_idx = jnp.arange(Kb)[:, None, None]
+        m_idx = jnp.arange(mid)[None, :, None]
+        c_idx = self.cols[:, None, :]
+        return out.at[k_idx, m_idx, c_idx].add(compact * self.col_mask[:, None, :])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Bucketed:
+    """A bucketed irregular tensor: static-shape buckets + global metadata.
+
+    Registered as a pytree (buckets are children; K/J/norm_sq are static aux)
+    so the whole dataset is a jit/pjit argument — the dry-run lowers als_step
+    against ShapeDtypeStruct buckets with subjects sharded over (pod, data).
+    """
+
+    buckets: List[Bucket]
+    n_subjects: int          # K (true count, before subject padding)
+    n_cols: int              # J
+    norm_sq: float           # ||X||_F^2 over all subjects (for fit computation)
+
+    def tree_flatten(self):
+        return (self.buckets,), (self.n_subjects, self.n_cols, self.norm_sq)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(buckets=children[0], n_subjects=aux[0], n_cols=aux[1], norm_sq=aux[2])
+
+    def tree_buckets(self) -> List[Bucket]:
+        return self.buckets
+
+
+def _pad_to(n: int, align: int) -> int:
+    return max(align, ((n + align - 1) // align) * align)
+
+
+def bucketize(
+    data: IrregularCOO,
+    *,
+    max_buckets: int = 4,
+    row_align: int = 8,
+    col_align: int = 8,
+    subject_align: int = 1,
+    dtype=jnp.float32,
+    plan: Optional[BucketPlan] = None,
+) -> Bucketed:
+    """Host-side conversion IrregularCOO -> Bucketed CC format.
+
+    ``subject_align`` pads each bucket's subject count to a multiple (use the
+    data-parallel shard count so the leading axis divides evenly).
+    """
+    rc = data.row_counts()
+    cc = data.col_counts()
+    if plan is None:
+        plan = plan_buckets(rc, cc, max_buckets=max_buckets, row_align=row_align, col_align=col_align)
+    buckets: List[Bucket] = []
+    for (i_pad, c_pad), members in zip(plan.shapes, plan.members):
+        kb = _pad_to(len(members), subject_align)
+        vals = np.zeros((kb, i_pad, c_pad), dtype=np.float32 if dtype == jnp.float32 else np.float64)
+        cols = np.zeros((kb, c_pad), dtype=np.int32)
+        cmask = np.zeros((kb, c_pad), dtype=vals.dtype)
+        sids = np.zeros((kb,), dtype=np.int32)
+        smask = np.zeros((kb,), dtype=vals.dtype)
+        rows_n = np.zeros((kb,), dtype=np.int32)
+        for slot, k in enumerate(members):
+            s = data.subjects[k]
+            kept = s.nonzero_cols()
+            remap = {int(c): i for i, c in enumerate(kept)}
+            local_c = np.asarray([remap[int(c)] for c in s.cols], dtype=np.int32)
+            vals[slot, s.rows, local_c] = s.vals
+            cols[slot, : kept.size] = kept
+            cmask[slot, : kept.size] = 1.0
+            sids[slot] = k
+            smask[slot] = 1.0
+            rows_n[slot] = s.n_rows
+        buckets.append(
+            Bucket(
+                vals=jnp.asarray(vals, dtype=dtype),
+                cols=jnp.asarray(cols),
+                col_mask=jnp.asarray(cmask, dtype=dtype),
+                subject_ids=jnp.asarray(sids),
+                subject_mask=jnp.asarray(smask, dtype=dtype),
+                row_counts=jnp.asarray(rows_n),
+            )
+        )
+    return Bucketed(
+        buckets=buckets,
+        n_subjects=data.n_subjects,
+        n_cols=data.n_cols,
+        norm_sq=data.frobenius_sq(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# BCC: block-compressed columns (Pallas kernel layout)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockBucket:
+    """BCC layout: columns quantized to LANE-wide blocks of J.
+
+    vals:     f[Kb, I_pad, NB, LANE]  dense values per kept column-block
+    blk_ids:  i32[Kb, NB]             global block index (j // LANE) (pad: 0)
+    blk_mask: f[Kb, NB]               1.0 for real blocks
+    """
+
+    vals: jax.Array
+    blk_ids: jax.Array
+    blk_mask: jax.Array
+    subject_ids: jax.Array
+    subject_mask: jax.Array
+
+    def tree_flatten(self):
+        return (self.vals, self.blk_ids, self.blk_mask, self.subject_ids, self.subject_mask), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def kb(self):
+        return self.vals.shape[0]
+
+    @property
+    def i_pad(self):
+        return self.vals.shape[1]
+
+    @property
+    def n_blocks(self):
+        return self.vals.shape[2]
+
+
+def to_block_bucket(b: Bucket, J: int, *, max_blocks: Optional[int] = None) -> BlockBucket:
+    """Host-side CC -> BCC conversion (column ids quantized to LANE blocks)."""
+    vals = np.asarray(b.vals)
+    cols = np.asarray(b.cols)
+    cmask = np.asarray(b.col_mask) > 0
+    kb, i_pad, _ = vals.shape
+    per_subject_blocks = []
+    for k in range(kb):
+        kept = cols[k][cmask[k]]
+        per_subject_blocks.append(np.unique(kept // LANE) if kept.size else np.zeros((0,), np.int64))
+    nb = max((blk.size for blk in per_subject_blocks), default=1)
+    nb = max(nb, 1)
+    if max_blocks is not None:
+        nb = min(nb, max_blocks)
+    out_vals = np.zeros((kb, i_pad, nb, LANE), dtype=vals.dtype)
+    blk_ids = np.zeros((kb, nb), dtype=np.int32)
+    blk_mask = np.zeros((kb, nb), dtype=vals.dtype)
+    for k in range(kb):
+        blocks = per_subject_blocks[k][:nb]
+        pos = {int(bid): i for i, bid in enumerate(blocks)}
+        blk_ids[k, : blocks.size] = blocks
+        blk_mask[k, : blocks.size] = 1.0
+        kept_idx = np.nonzero(cmask[k])[0]
+        for ci in kept_idx:
+            gcol = int(cols[k, ci])
+            bslot = pos.get(gcol // LANE)
+            if bslot is None:
+                continue  # truncated by max_blocks
+            out_vals[k, :, bslot, gcol % LANE] = vals[k, :, ci]
+    return BlockBucket(
+        vals=jnp.asarray(out_vals),
+        blk_ids=jnp.asarray(blk_ids),
+        blk_mask=jnp.asarray(blk_mask),
+        subject_ids=b.subject_ids,
+        subject_mask=b.subject_mask,
+    )

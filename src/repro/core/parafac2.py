@@ -1,0 +1,240 @@
+"""PARAFAC2-ALS with the SPARTan MTTKRP — the paper's full fitting algorithm.
+
+One ALS iteration (Algorithm 2 of the paper) on the bucketed CC format:
+
+  1. Procrustes step (batched over subjects): B_k = X_k V S_k H^T,
+     Q_k = polar(B_k)  (Gram-eigh by default — see procrustes.py).
+  2. Project: Y_k = Q_k^T X_k  (CC: shares X_k's kept-column ids).
+  3. ONE CP-ALS iteration on {Y_k} via the SPARTan mode-1/2/3 MTTKRPs:
+     H <- M1 (W^TW * V^TV)^+ ;  V <- nnls(M2, W^TW * H^TH) ;
+     W <- nnls(M3, V^TV * H^TH) ;  S_k = diag(W(k,:)).
+  4. Fit = 1 - sqrt(sum_k ||X_k - Q_k H S_k V^T||^2) / ||X||_F.
+
+Everything inside :func:`als_step` is jit/pjit-compatible; subjects shard over
+the leading bucket axis. ``mode1_reuse=True`` enables the beyond-paper
+optimization Y_k V = Q_k^T (X_k V) (cached from step 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.irregular import Bucket, Bucketed
+from repro.core import spartan
+from repro.core.cp import cp_gram, factor_update, normalize_columns
+from repro.core.procrustes import solve_q
+
+__all__ = ["Parafac2State", "Parafac2Options", "init_state", "als_step", "fit", "reconstruct_uk", "w_global"]
+
+
+class Parafac2State(NamedTuple):
+    H: jax.Array          # [R, R]
+    V: jax.Array          # [J, R]
+    W: jax.Array          # [K, R]  (S_k = diag(W[k]))
+    fit: jax.Array        # scalar, model fit in [−inf, 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Parafac2Options:
+    rank: int
+    nonneg: bool = True                 # nonneg on V, W (S_k) as in the paper
+    procrustes: str = "gram_eigh"       # "svd" | "gram_eigh" | "newton_schulz"
+    mode1_reuse: bool = True            # beyond-paper: reuse X_k V from step 1
+    nnls_sweeps: int = 5
+    dtype: Any = jnp.float32
+    # W layout: "global" [K,R] (simple, interpretable) or "bucketed" (tuple of
+    # per-bucket [Kb,R] rows aligned with the data shards — no W gathers under
+    # pjit; the layout production runs use, §Perf 'bucketed W').
+    w_layout: str = "global"
+
+
+def init_state(data: Bucketed, opts: Parafac2Options, seed: int = 0) -> Parafac2State:
+    """H = I, V random (nonneg if constrained), W = 1 — Kiers-style init."""
+    R = opts.rank
+    key = jax.random.PRNGKey(seed)
+    H = jnp.eye(R, dtype=opts.dtype)
+    if opts.nonneg:
+        V = jax.random.uniform(key, (data.n_cols, R), opts.dtype)
+    else:
+        V = jax.random.normal(key, (data.n_cols, R), opts.dtype)
+    if opts.w_layout == "bucketed":
+        W = tuple(jnp.ones((b.kb, R), opts.dtype) * b.subject_mask[:, None]
+                  for b in data.buckets)
+    else:
+        W = jnp.ones((data.n_subjects, R), opts.dtype)
+    return Parafac2State(H=H, V=V, W=W, fit=jnp.asarray(-jnp.inf, opts.dtype))
+
+
+def _w_rows(W, b: Bucket, i: int):
+    """W rows for bucket i (no gather in the bucketed layout)."""
+    if isinstance(W, tuple):
+        return W[i]
+    return jnp.take(W, b.subject_ids, axis=0)
+
+
+def _w_gram(W):
+    if isinstance(W, tuple):
+        return sum(wb.T @ wb for wb in W)
+    return W.T @ W
+
+
+def w_global(data: Bucketed, W) -> jnp.ndarray:
+    """Assemble a global [K, R] W from either layout (interpretation)."""
+    if not isinstance(W, tuple):
+        return W
+    R = W[0].shape[1]
+    out = jnp.zeros((data.n_subjects, R), W[0].dtype)
+    for b, wb in zip(data.buckets, W):
+        out = out.at[b.subject_ids].add(wb * b.subject_mask[:, None])
+    return out
+
+
+def _procrustes_project(
+    b: Bucket, H: jax.Array, V: jax.Array, W: jax.Array, opts: Parafac2Options,
+    i: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Steps 1+2 for one bucket -> (Yc, XkV, Q)."""
+    Vg = b.gather_v(V)                                   # [Kb, C, R]
+    XkV = b.xk_times_v(V, Vg)                            # [Kb, I, R]
+    Wb = _w_rows(W, b, i)                                # [Kb, R]
+    # B_k = X_k V S_k H^T  == (XkV * w_k) @ H^T
+    B = jnp.einsum("kir,lr->kil", XkV * Wb[:, None, :], H)
+    Q = solve_q(B, opts.procrustes)                      # [Kb, I, R]
+    Q = Q * b.subject_mask[:, None, None]
+    Yc = b.project(Q)                                    # [Kb, R, C]
+    return Yc, XkV, Q
+
+
+def als_step(
+    data: Bucketed,
+    state: Parafac2State,
+    opts: Parafac2Options,
+) -> Parafac2State:
+    """One full PARAFAC2-ALS iteration (jit-compatible)."""
+    H, V, W = state.H, state.V, state.W
+    R, J, K = opts.rank, data.n_cols, data.n_subjects
+
+    bucketed = isinstance(W, tuple)
+
+    def scale_w(W, norms):
+        if isinstance(W, tuple):
+            return tuple(wb * norms[None, :] for wb in W)
+        return W * norms[None, :]
+
+    # ---- 1+2: Procrustes + projection, per bucket --------------------------
+    per_bucket = [_procrustes_project(b, H, V, W, opts, i)
+                  for i, b in enumerate(data.buckets)]
+
+    # ---- 3a: H update (mode-1 MTTKRP) --------------------------------------
+    M1 = jnp.zeros((R, R), opts.dtype)
+    for i, (b, (Yc, XkV, Q)) in enumerate(zip(data.buckets, per_bucket)):
+        Wb = _w_rows(W, b, i)
+        if opts.mode1_reuse:
+            # Y_k V = Q_k^T (X_k V): skip the gather+matmul on sparse data.
+            YkV = jnp.einsum("kir,kil->krl", Q, XkV)
+            M1 = M1 + spartan.mode1_bucket(Yc, None, Wb, b.subject_mask, YkV=YkV)
+        else:
+            Vg = b.gather_v(V)
+            M1 = M1 + spartan.mode1_bucket(Yc, Vg, Wb, b.subject_mask)
+    H_new = factor_update(M1, _w_gram(W) * (V.T @ V), H, nonneg=False)
+    H_new, h_norms = normalize_columns(H_new)
+    W = scale_w(W, h_norms)         # absorb scale (model-invariant)
+
+    # ---- 3b: V update (mode-2 MTTKRP) --------------------------------------
+    M2 = jnp.zeros((J, R), opts.dtype)
+    for i, (b, (Yc, _, _)) in enumerate(zip(data.buckets, per_bucket)):
+        Wb = _w_rows(W, b, i)
+        A = spartan.mode2_bucket_compact(Yc, H_new, Wb, b.col_mask, b.subject_mask)
+        M2 = M2 + spartan.mode2_scatter(A, b.cols, J)
+    V_new = factor_update(M2, _w_gram(W) * (H_new.T @ H_new), V, nonneg=opts.nonneg,
+                          nnls_sweeps=opts.nnls_sweeps)
+    V_new, v_norms = normalize_columns(V_new)
+    W = scale_w(W, v_norms)
+
+    # ---- 3c: W update (mode-3 MTTKRP) --------------------------------------
+    VtV = V_new.T @ V_new
+    gram3 = VtV * (H_new.T @ H_new)
+    rows_per_bucket = []
+    for b, (Yc, _, _) in zip(data.buckets, per_bucket):
+        Vg_new = b.gather_v(V_new)
+        YkV_new = jnp.einsum("krc,kcl->krl", Yc, Vg_new)
+        rows_per_bucket.append(
+            spartan.mode3_bucket(Yc, None, H_new, b.subject_mask, YkV=YkV_new))
+    if bucketed:
+        # per-bucket W rows update in place — no K-wide scatter, no gathers
+        W_new = tuple(
+            factor_update(rows, gram3, wb, nonneg=opts.nonneg,
+                          nnls_sweeps=opts.nnls_sweeps) * b.subject_mask[:, None]
+            for rows, wb, b in zip(rows_per_bucket, W, data.buckets))
+    else:
+        M3 = jnp.zeros((K, R), opts.dtype)
+        for b, rows in zip(data.buckets, rows_per_bucket):
+            M3 = M3.at[b.subject_ids].add(rows)
+        W_new = factor_update(M3, gram3, W, nonneg=opts.nonneg,
+                              nnls_sweeps=opts.nnls_sweeps)
+
+    # ---- 4: fit ------------------------------------------------------------
+    # ||X_k - Q_k H S_k V^T||^2 = ||X||^2 - 2 tr(S H^T G_k) + tr(S Φ S V^T V),
+    # with G_k = Y_k V_new and Φ = H^T H — all R x R algebra.
+    Phi = H_new.T @ H_new
+    resid = jnp.asarray(data.norm_sq, opts.dtype)
+    for i, (b, (Yc, _, _)) in enumerate(zip(data.buckets, per_bucket)):
+        Vg_new = b.gather_v(V_new)
+        G = jnp.einsum("krc,kcl->krl", Yc, Vg_new)             # [Kb, R, R]
+        Wb = _w_rows(W_new, b, i)                              # [Kb, R]
+        cross = jnp.einsum("rl,krl,kl,k->", H_new, G, Wb, b.subject_mask)
+        model = jnp.einsum("rl,rl,kr,kl,k->", Phi, VtV, Wb, Wb, b.subject_mask)
+        resid = resid - 2.0 * cross + model
+    fit_val = 1.0 - jnp.sqrt(jnp.maximum(resid, 0.0)) / jnp.sqrt(
+        jnp.asarray(data.norm_sq, opts.dtype))
+
+    return Parafac2State(H=H_new, V=V_new, W=W_new, fit=fit_val)
+
+
+def fit(
+    data: Bucketed,
+    opts: Parafac2Options,
+    *,
+    max_iters: int = 100,
+    tol: float = 1e-6,
+    seed: int = 0,
+    verbose: bool = False,
+    state: Optional[Parafac2State] = None,
+) -> Tuple[Parafac2State, List[float]]:
+    """Full fitting loop with fit-change convergence (host-side loop)."""
+    if state is None:
+        state = init_state(data, opts, seed)
+    step = jax.jit(lambda s: als_step(data, s, opts))
+    history: List[float] = []
+    prev = -np.inf
+    for it in range(max_iters):
+        state = step(state)
+        f = float(state.fit)
+        history.append(f)
+        if verbose:
+            print(f"iter {it:3d}  fit={f:.6f}")
+        if it > 0 and abs(f - prev) < tol:
+            break
+        prev = f
+    return state, history
+
+
+def reconstruct_uk(
+    data: Bucketed, state: Parafac2State, opts: Parafac2Options
+) -> Dict[int, np.ndarray]:
+    """Assemble U_k = Q_k H per subject (host-side, for interpretation)."""
+    out: Dict[int, np.ndarray] = {}
+    for i, b in enumerate(data.buckets):
+        Yc, XkV, Q = _procrustes_project(b, state.H, state.V, state.W, opts, i)
+        Uk = np.asarray(jnp.einsum("kir,rl->kil", Q, state.H))
+        sids = np.asarray(b.subject_ids)
+        smask = np.asarray(b.subject_mask)
+        rows = np.asarray(b.row_counts)
+        for slot in range(b.kb):
+            if smask[slot] > 0:
+                out[int(sids[slot])] = Uk[slot, : rows[slot], :]
+    return out

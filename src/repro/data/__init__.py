@@ -1,0 +1,4 @@
+from repro.data.tokens import TokenStream
+from repro.data.ehr import choa_like, movielens_like
+
+__all__ = ["TokenStream", "choa_like", "movielens_like"]

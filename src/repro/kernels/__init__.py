@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the SPARTan MTTKRP hot spots (+ jnp oracles).
+
+``ops``  — public jit'd wrappers (interpret=True off-TPU)
+``ref``  — pure-jnp oracles (the correctness contract)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel — BCC gather-matmul  X_k V  with scalar-prefetched block ids.
+
+The TPU-native replacement for sparse row-gather: column indices are quantized
+to 128-wide blocks of J (BCC format, see repro.core.irregular). The per-subject
+block-id list is a scalar-prefetch operand, so the BlockSpec ``index_map`` for
+V *itself* selects which 128-row V block is DMA'd into VMEM — the gather is
+performed by the memory system, not by compute. Padded blocks carry zero
+values, so gathering V-block 0 for them is harmless.
+
+  vals    [K, I, NB, L]  dense values per kept column-block (L = 128)
+  blk_ids [K, NB]        global block index into V (scalar prefetch)
+  V       [J_pad, R]     factor matrix, J_pad % L == 0
+  out     [K, I, R]      X_k V
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_matmul_pallas"]
+
+
+def _kernel(blk_ref, vals_ref, v_ref, out_ref, *, nb: int):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # vals block [1, I, 1, L] @ gathered V block [L, R]
+    x = vals_ref[0, :, 0, :]                      # [I, L]
+    out_ref[0] += jnp.dot(x, v_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_matmul_pallas(
+    vals: jax.Array,
+    blk_ids: jax.Array,
+    V: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    K, I, NB, L = vals.shape
+    J_pad, R = V.shape
+    if J_pad % L:
+        raise ValueError(f"V rows ({J_pad}) must be a multiple of the lane width {L}")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K, NB),
+        in_specs=[
+            pl.BlockSpec((1, I, 1, L), lambda k, b, blk: (k, 0, b, 0)),
+            # the gather: V's block row is chosen by the prefetched id
+            pl.BlockSpec((L, R), lambda k, b, blk: (blk[k, b], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, I, R), lambda k, b, blk: (k, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, nb=NB),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, I, R), jnp.float32),
+        interpret=interpret,
+    )(blk_ids, vals, V)

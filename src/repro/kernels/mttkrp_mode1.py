@@ -1,0 +1,65 @@
+"""Pallas TPU kernel — SPARTan mode-1 MTTKRP.
+
+Computes  M1 = sum_k (Y_k V) * W(k,:)  with the per-k R x C slice and the
+gathered C x R V-rows streamed HBM -> VMEM, the R x C @ C x R product on the
+MXU, the row-wise Hadamard with W(k,:) on the VPU, and the R x R accumulator
+resident in the output VMEM window across the whole grid (classic revisited-
+window reduction). Optionally tiles C for large kept-column counts.
+
+Alignment: best MXU utilization wants R padded to 8 (sublane) and C to 128
+(lane); the bucketizer's ``col_align=128`` produces that. Works (slower) for
+odd shapes too; interpret=True is bit-exact on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mode1_pallas"]
+
+
+def _kernel(yc_ref, vg_ref, wb_ref, out_ref):
+    k = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when((k == 0) & (c == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    yv = jnp.dot(yc_ref[0], vg_ref[0], preferred_element_type=jnp.float32)  # [R, R]
+    out_ref[...] += yv * wb_ref[0][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def mode1_pallas(
+    Yc: jax.Array,
+    Vg: jax.Array,
+    Wb: jax.Array,
+    *,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Yc [K,R,C] (subject-mask pre-applied), Vg [K,C,R], Wb [K,R] -> [R,R]."""
+    K, R, C = Yc.shape
+    bc = min(block_c, C)
+    nc = pl.cdiv(C, bc)
+    if C % bc:  # zero-pad partial tile (zero columns contribute nothing)
+        pad = nc * bc - C
+        Yc = jnp.pad(Yc, ((0, 0), (0, 0), (0, pad)))
+        Vg = jnp.pad(Vg, ((0, 0), (0, pad), (0, 0)))
+    grid = (K, nc)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, R, bc), lambda k, c: (k, 0, c)),
+            pl.BlockSpec((1, bc, R), lambda k, c: (k, c, 0)),
+            pl.BlockSpec((1, R), lambda k, c: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((R, R), lambda k, c: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, R), jnp.float32),
+        interpret=interpret,
+    )(Yc, Vg, Wb)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel — SPARTan mode-2 MTTKRP, compact compute stage.
+
+Computes  A[k] = (Y_k^T H) * W(k,:)  for the kept columns only (paper Fig. 3);
+the J-space scatter-add is a separate memory-bound stage handled by XLA
+(`spartan.mode2_scatter`). The C x R result per subject stays in VMEM;
+C is tiled for large kept-column counts. H (R x R) is small and replicated to
+every grid step (the paper's "size imbalance" property).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mode2_compact_pallas"]
+
+
+def _kernel(yc_ref, h_ref, wb_ref, out_ref):
+    # yc [1, R, bc]; h [R, R]; wb [1, R]; out [1, bc, R]
+    ytH = jnp.dot(yc_ref[0].T, h_ref[...], preferred_element_type=jnp.float32)
+    out_ref[0] = ytH * wb_ref[0][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def mode2_compact_pallas(
+    Yc: jax.Array,
+    H: jax.Array,
+    Wb: jax.Array,
+    *,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Yc [K,R,C] (masks pre-applied), H [R,R], Wb [K,R] -> A [K,C,R]."""
+    K, R, C = Yc.shape
+    bc = min(block_c, C)
+    nc = pl.cdiv(C, bc)
+    C_pad = nc * bc
+    if C % bc:
+        Yc = jnp.pad(Yc, ((0, 0), (0, 0), (0, C_pad - C)))
+    grid = (K, nc)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, R, bc), lambda k, c: (k, 0, c)),
+            pl.BlockSpec((R, R), lambda k, c: (0, 0)),
+            pl.BlockSpec((1, R), lambda k, c: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, R), lambda k, c: (k, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, C_pad, R), jnp.float32),
+        interpret=interpret,
+    )(Yc, H, Wb)
+    return out[:, :C, :]

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel — SPARTan mode-3 MTTKRP.
+
+Computes  M3(k,:) = coldot(H, Y_k V): the R x R product Y_k V is formed on the
+MXU (tiled over C), then contracted column-wise against H on the VPU. One
+output row per subject. The C-tiling accumulates the R x R partial product in
+a VMEM scratch buffer; the coldot runs on the final tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mode3_pallas"]
+
+
+def _kernel(yc_ref, vg_ref, h_ref, out_ref, acc_ref, *, nc: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(yc_ref[0], vg_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(c == nc - 1)
+    def _fin():
+        out_ref[0] = jnp.sum(h_ref[...] * acc_ref[...], axis=0)  # coldot
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def mode3_pallas(
+    Yc: jax.Array,
+    Vg: jax.Array,
+    H: jax.Array,
+    *,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Yc [K,R,C] (masks pre-applied), Vg [K,C,R], H [R,R] -> [K,R]."""
+    K, R, C = Yc.shape
+    bc = min(block_c, C)
+    nc = pl.cdiv(C, bc)
+    if C % bc:  # zero-pad partial tile
+        pad = nc * bc - C
+        Yc = jnp.pad(Yc, ((0, 0), (0, 0), (0, pad)))
+        Vg = jnp.pad(Vg, ((0, 0), (0, pad), (0, 0)))
+    grid = (K, nc)
+    return pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, R, bc), lambda k, c: (k, 0, c)),
+            pl.BlockSpec((1, bc, R), lambda k, c: (k, c, 0)),
+            pl.BlockSpec((R, R), lambda k, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R), lambda k, c: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, R), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((R, R), jnp.float32)],
+        interpret=interpret,
+    )(Yc, Vg, H)

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs in Python/XLA-CPU for correctness validation. On TPU they
+compile to Mosaic. ``use_pallas=False`` falls back to the jnp oracle (ref.py),
+which is also what the pure-JAX SPARTan path uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.mttkrp_mode1 import mode1_pallas
+from repro.kernels.mttkrp_mode2 import mode2_compact_pallas
+from repro.kernels.mttkrp_mode3 import mode3_pallas
+from repro.kernels.gather_matmul import gather_matmul_pallas
+
+__all__ = ["mttkrp_mode1", "mttkrp_mode2_compact", "mttkrp_mode3", "gather_matmul"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mttkrp_mode1(Yc, Vg, Wb, *, use_pallas: bool = True, block_c: int = 512):
+    if not use_pallas:
+        return ref.mode1_ref(Yc, Vg, Wb)
+    return mode1_pallas(Yc, Vg, Wb, block_c=block_c, interpret=_interpret())
+
+
+def mttkrp_mode2_compact(Yc, H, Wb, *, use_pallas: bool = True, block_c: int = 512):
+    if not use_pallas:
+        return ref.mode2_compact_ref(Yc, H, Wb)
+    return mode2_compact_pallas(Yc, H, Wb, block_c=block_c, interpret=_interpret())
+
+
+def mttkrp_mode3(Yc, Vg, H, *, use_pallas: bool = True, block_c: int = 512):
+    if not use_pallas:
+        return ref.mode3_ref(Yc, Vg, H)
+    return mode3_pallas(Yc, Vg, H, block_c=block_c, interpret=_interpret())
+
+
+def gather_matmul(vals, blk_ids, V, *, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.gather_matmul_ref(vals, blk_ids, V)
+    return gather_matmul_pallas(vals, blk_ids, V, interpret=_interpret())

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors one kernel's exact interface; kernel tests sweep shapes
+and dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mode1_ref", "mode2_compact_ref", "mode3_ref", "gather_matmul_ref"]
+
+
+def mode1_ref(Yc: jax.Array, Vg: jax.Array, Wb: jax.Array) -> jax.Array:
+    """sum_k (Y_k V) * W(k,:)  ->  [R, R].
+
+    Yc [K, R, C] compressed slices; Vg [K, C, R] gathered V rows; Wb [K, R].
+    Padded subjects must arrive zeroed (mask pre-applied), as the kernel
+    accumulates unconditionally.
+    """
+    YkV = jnp.einsum("krc,kcl->krl", Yc, Vg, preferred_element_type=jnp.float32)
+    return jnp.einsum("krl,kl->rl", YkV, Wb.astype(jnp.float32))
+
+
+def mode2_compact_ref(Yc: jax.Array, H: jax.Array, Wb: jax.Array) -> jax.Array:
+    """A[k] = (Y_k^T H) * W(k,:)  ->  [K, C, R] (compact mode-2 stage)."""
+    A = jnp.einsum("krc,rl->kcl", Yc, H, preferred_element_type=jnp.float32)
+    return A * Wb[:, None, :].astype(jnp.float32)
+
+
+def mode3_ref(Yc: jax.Array, Vg: jax.Array, H: jax.Array) -> jax.Array:
+    """M3 rows: out[k,:] = coldot(H, Y_k V)  ->  [K, R]."""
+    YkV = jnp.einsum("krc,kcl->krl", Yc, Vg, preferred_element_type=jnp.float32)
+    return jnp.einsum("rl,krl->kl", H.astype(jnp.float32), YkV)
+
+
+def gather_matmul_ref(vals: jax.Array, blk_ids: jax.Array, V: jax.Array) -> jax.Array:
+    """BCC X_k V: vals [K, I, NB, L], blk_ids [K, NB], V [J_pad, R] with
+    J_pad % L == 0. Padded blocks must be zero-valued (mask pre-applied).
+    Returns [K, I, R]."""
+    K, I, NB, L = vals.shape
+    R = V.shape[1]
+    V_blocks = V.reshape(-1, L, R)                       # [J_pad/L, L, R]
+    Vg = V_blocks[blk_ids]                               # [K, NB, L, R]
+    return jnp.einsum("kinl,knlr->kir", vals, Vg, preferred_element_type=jnp.float32)

@@ -1,0 +1,458 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: the dry-run (and only the dry-run) builds the
+# 512-chip production mesh out of host placeholder devices.
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import (
+    TPU_V5E, calibrate_flops_convention, model_flops, roofline_terms)
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+from repro.core import Bucket, Bucketed, Parafac2Options, Parafac2State, als_step
+from repro.dist.sharding import LM_RULES, SP_RULES, axis_rules, param_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "results", "dryrun.json")
+
+
+# ---------------------------------------------------------------------------
+# sharding builders
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, names) -> int:
+    n = 1
+    for nm in names:
+        if nm in mesh.axis_names:
+            n *= mesh.devices.shape[mesh.axis_names.index(nm)]
+    return n
+
+
+def _div(n: int, mesh: Mesh, names) -> bool:
+    s = _axis_size(mesh, names)
+    return s > 1 and n % s == 0
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_shardings(specs: Dict[str, Any], mesh: Mesh):
+    dp = _dp_axes(mesh)
+
+    def spec_for(leaf):
+        if not hasattr(leaf, "shape") or not leaf.shape:
+            return NamedSharding(mesh, P())
+        B = leaf.shape[0]
+        if _div(B, mesh, dp):
+            return NamedSharding(mesh, P(dp + (), *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(spec_for, specs)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    dp = _dp_axes(mesh)
+
+    def visit(path, leaf):
+        pathstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        shape = leaf.shape
+        nd = len(shape)
+        parts = [None] * nd
+        def set_dim(d, axes):
+            parts[d] = axes if len(axes) > 1 else axes[0]
+        if "self" in pathstr or "cross" in pathstr:
+            # kv cache [...,B,S,KV,hd]
+            b_dim, s_dim, kv_dim = nd - 4, nd - 3, nd - 2
+            if _div(shape[b_dim], mesh, dp):
+                set_dim(b_dim, dp)
+            if _div(shape[kv_dim], mesh, ("model",)):
+                set_dim(kv_dim, ("model",))
+            elif _div(shape[s_dim], mesh, ("model",)):
+                set_dim(s_dim, ("model",))
+        elif "ssm" in pathstr:
+            # [..., B, H, P, N]
+            b_dim, h_dim = nd - 4, nd - 3
+            if _div(shape[b_dim], mesh, dp):
+                set_dim(b_dim, dp)
+            if _div(shape[h_dim], mesh, ("model",)):
+                set_dim(h_dim, ("model",))
+        elif "conv" in pathstr:
+            b_dim, c_dim = nd - 3, nd - 1
+            if _div(shape[b_dim], mesh, dp):
+                set_dim(b_dim, dp)
+            if _div(shape[c_dim], mesh, ("model",)):
+                set_dim(c_dim, ("model",))
+        elif pathstr.endswith("h") or "/h" in pathstr:
+            b_dim, w_dim = nd - 2, nd - 1
+            if _div(shape[b_dim], mesh, dp):
+                set_dim(b_dim, dp)
+            if _div(shape[w_dim], mesh, ("model",)):
+                set_dim(w_dim, ("model",))
+        while parts and parts[-1] is None:
+            parts.pop()
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# one LM cell
+# ---------------------------------------------------------------------------
+
+def _lower_compile(cfg, shape_name: str, mesh: Mesh, *, unroll: bool, rules=LM_RULES,
+                   microbatches: int = 1):
+    """Lower + compile one step function for `cfg` on `mesh`."""
+    from repro.dist.sharding import unroll_loops
+    import contextlib
+
+    shape = SHAPES[shape_name]
+    bundle = build(cfg, microbatches=microbatches)
+    ctxs = [axis_rules(rules, mesh), mesh]
+    if unroll:
+        ctxs.append(unroll_loops())
+    with contextlib.ExitStack() as stack:
+        for c in ctxs:
+            stack.enter_context(c)
+        rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        params_shapes = jax.eval_shape(bundle.init_params, rng_spec)
+        p_sh = param_shardings(params_shapes, mesh)
+        specs = bundle.input_specs(shape_name)
+        t0 = time.perf_counter()
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(bundle.init_opt, params_shapes)
+            o_sh = param_shardings(opt_shapes, mesh)
+            b_sh = batch_shardings(specs["batch"], mesh)
+            lowered = jax.jit(
+                bundle.train_step,
+                in_shardings=(p_sh, o_sh, b_sh, None),
+                out_shardings=(p_sh, o_sh, None),
+            ).lower(params_shapes, opt_shapes, specs["batch"], specs["step"])
+        elif shape.kind == "prefill":
+            b_sh = batch_shardings(specs["batch"], mesh)
+            lowered = jax.jit(
+                bundle.prefill_step, in_shardings=(p_sh, b_sh),
+            ).lower(params_shapes, specs["batch"])
+        else:  # decode
+            c_sh = cache_shardings(specs["cache"], mesh)
+            t_sh = batch_shardings({"t": specs["tokens"]}, mesh)["t"]
+            lowered = jax.jit(
+                bundle.decode_step,
+                in_shardings=(p_sh, c_sh, t_sh, None),
+                out_shardings=(None, c_sh),
+            ).lower(params_shapes, specs["cache"], specs["tokens"], specs["pos"])
+        lower_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
+    return compiled, lower_s, compile_s
+
+
+def _variant_cfg(cfg, units: int):
+    """Scale every stacked depth to `units` pattern-groups (affine-cost probe)."""
+    import dataclasses as dc
+    from repro.models.transformer import default_pattern
+
+    p = len(default_pattern(cfg))
+    kw = {"n_layers": units * p, "remat": cfg.remat}
+    if cfg.is_encdec:
+        kw["encoder_layers"] = units
+    return dc.replace(cfg, **kw)
+
+
+def _raw_costs(compiled, hw) -> Dict[str, float]:
+    t = roofline_terms(compiled, hw=hw)
+    return {"hlo_flops": t["hlo_flops"], "hlo_bytes": t["hlo_bytes"],
+            "collective_bytes": t["collective_bytes"]}
+
+
+def run_cell(arch: str, shape_name: str, mesh: Mesh, mesh_name: str,
+             hw=TPU_V5E, *, roofline: bool = True, sp: bool = False,
+             remat_policy: str = "", microbatches: int = 1) -> Dict[str, Any]:
+    """One (arch x shape x mesh) cell.
+
+    Full scanned model: compiled for the shardability proof + memory_analysis.
+    Roofline terms: XLA cost analysis counts while-loop bodies once, so the
+    three terms come from TWO fully-unrolled probe models (1 and 2 pattern-
+    groups deep) extrapolated affinely in depth — exact because step cost is
+    affine in layer count (intercept = embed/head/loss/optimizer).
+    """
+    cfg = get_config(arch)
+    if remat_policy:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, remat_policy=remat_policy)
+    shape = SHAPES[shape_name]
+    rules = SP_RULES if sp else LM_RULES
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "sp": sp,
+        "kind": shape.kind, "n_chips": n_chips,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    rec["microbatches"] = microbatches
+    compiled, rec["lower_s"], rec["compile_s"] = _lower_compile(
+        cfg, shape_name, mesh, unroll=False, rules=rules, microbatches=microbatches)
+    mem = compiled.memory_analysis()
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        rec[attr] = int(getattr(mem, attr, 0) or 0)
+    rec["bytes_per_device"] = (
+        rec["argument_size_in_bytes"] + rec["temp_size_in_bytes"])
+    rec["fits_hbm_16g"] = rec["bytes_per_device"] <= 16 * 2**30
+
+    if not roofline:
+        return rec
+
+    # --- unrolled 1-/2-group probes -> affine extrapolation in depth --------
+    from repro.models.transformer import default_pattern
+
+    p = len(default_pattern(cfg))
+    units_full = cfg.n_layers / p
+    c1, _, s1 = _lower_compile(_variant_cfg(cfg, 1), shape_name, mesh, unroll=True, rules=rules,
+                               microbatches=microbatches)
+    c2, _, s2 = _lower_compile(_variant_cfg(cfg, 2), shape_name, mesh, unroll=True, rules=rules,
+                               microbatches=microbatches)
+    rec["probe_compile_s"] = s1 + s2
+    r1, r2 = _raw_costs(c1, hw), _raw_costs(c2, hw)
+    extrap = {}
+    for k in r1:
+        per_unit = r2[k] - r1[k]
+        extrap[k] = max(r1[k] + (units_full - 1.0) * per_unit, 0.0)
+        # the microbatch accumulation scan is a while loop: its body is
+        # counted once by cost analysis -> scale to the full step.
+        extrap[k] *= max(microbatches, 1)
+    rec.update(extrap)
+    rec["t_compute"] = extrap["hlo_flops"] / hw.peak_flops
+    # memory term, two bounds: HLO bytes-accessed is pre-fusion (upper bound);
+    # live bytes (params+opt+cache+activations touched once) is the lower.
+    rec["t_memory_hlo"] = extrap["hlo_bytes"] / hw.hbm_bw
+    rec["t_memory"] = rec["bytes_per_device"] / hw.hbm_bw
+    rec["t_collective"] = extrap["collective_bytes"] / hw.link_bw
+    dominant = max(("t_compute", "t_memory", "t_collective"), key=lambda k: rec[k])
+    rec["bottleneck"] = dominant
+    tmax = rec[dominant]
+    rec["roofline_fraction_compute"] = rec["t_compute"] / tmax if tmax > 0 else 0.0
+    mf = model_flops(cfg, shape, per_device=True, n_chips=n_chips)
+    rec["model_flops_per_device"] = mf
+    rec["useful_fraction"] = mf / extrap["hlo_flops"] if extrap["hlo_flops"] else 0.0
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# PARAFAC2 cells (the paper's workload on the production mesh)
+# ---------------------------------------------------------------------------
+
+def parafac2_specs(K: int, J: int, R: int, geometry, dp: int):
+    """ShapeDtypeStruct Bucketed + state for a dataset geometry
+    [(Kb, I_pad, C_pad)...]; Kb rounded up to the DP shard count."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    K = ((K + dp - 1) // dp) * dp   # pad subject count to the DP shard count
+    bf16 = jnp.bfloat16
+    buckets = []
+    for kb, ip, cp in geometry:
+        kb = ((kb + dp - 1) // dp) * dp
+        buckets.append(Bucket(
+            vals=sds((kb, ip, cp), bf16),   # bf16 slice values, f32 accum
+            cols=sds((kb, cp), i32),
+            col_mask=sds((kb, cp), f32),
+            subject_ids=sds((kb,), i32),
+            subject_mask=sds((kb,), f32),
+            row_counts=sds((kb,), i32),
+        ))
+    data = Bucketed(buckets=buckets, n_subjects=K, n_cols=J, norm_sq=1.0)
+    state = Parafac2State(
+        H=sds((R, R), f32), V=sds((J, R), f32),
+        W=tuple(sds((b.vals.shape[0], R), f32) for b in buckets),  # bucketed W
+        fit=sds((), f32))
+    return data, state
+
+
+def parafac2_shardings(data: Bucketed, state, mesh: Mesh, *, wide: bool = True):
+    """wide=True: subjects shard over EVERY mesh axis (pod x data x model) —
+    the paper's workload has no tensor-parallel dimension, so leaving "model"
+    idle wastes 16x memory/compute capacity (§Perf 'subject-wide sharding')."""
+    axes = tuple(mesh.axis_names) if wide else _dp_axes(mesh)
+    def b_shard(b: Bucket):
+        kb = NamedSharding(mesh, P(axes))
+        return Bucket(
+            vals=kb, cols=kb, col_mask=kb, subject_ids=kb, subject_mask=kb,
+            row_counts=kb)
+    d_sh = Bucketed(buckets=[b_shard(b) for b in data.buckets],
+                    n_subjects=data.n_subjects, n_cols=data.n_cols, norm_sq=1.0)
+    s_sh = Parafac2State(
+        H=NamedSharding(mesh, P()),
+        V=NamedSharding(mesh, P()),        # replicated-V mode (J moderate)
+        W=tuple(NamedSharding(mesh, P(axes)) for _ in data.buckets),
+        fit=NamedSharding(mesh, P()))
+    return d_sh, s_sh
+
+
+PARAFAC2_CELLS = {
+    # name: (K, J, R, [(Kb_per_bucket, I_pad, C_pad)...]) — CHOA / synth-500M
+    "parafac2-choa-r40": (464_900, 1_328, 40,
+                          [(116_225, 32, 64), (116_225, 64, 96),
+                           (116_225, 96, 128), (116_225, 168, 256)]),
+    "parafac2-synth500m-r40": (1_000_000, 5_000, 40,
+                               [(250_000, 48, 256), (250_000, 64, 384),
+                                (250_000, 80, 512), (250_000, 104, 640)]),
+}
+
+
+def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E):
+    K, J, R, geom = PARAFAC2_CELLS[name]
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec = {"arch": name, "shape": "als_step", "mesh": mesh_name,
+           "kind": "parafac2", "n_chips": n_chips, "params": 0,
+           "active_params": 0}
+    opts = Parafac2Options(rank=R, nonneg=True, w_layout="bucketed")
+    wide = rec.get("wide", True)
+    dp = _axis_size(mesh, tuple(mesh.axis_names) if wide else ("pod", "data"))
+    data, state = parafac2_specs(K, J, R, geom, dp)
+    d_sh, s_sh = parafac2_shardings(data, state, mesh, wide=wide)
+    t0 = time.perf_counter()
+    with axis_rules(LM_RULES, mesh), mesh:
+        lowered = jax.jit(
+            lambda d, s: als_step(d, s, opts),
+            in_shardings=(d_sh, s_sh), out_shardings=s_sh,
+        ).lower(data, state)
+        rec["lower_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            rec[attr] = int(getattr(mem, attr, 0) or 0)
+        rec["bytes_per_device"] = (
+            rec["argument_size_in_bytes"] + rec["temp_size_in_bytes"])
+        rec["fits_hbm_16g"] = rec["bytes_per_device"] <= 16 * 2**30
+        terms = roofline_terms(compiled, hw=hw)
+        rec.update(terms)
+        rec["t_memory_hlo"] = terms["t_memory"]
+        rec["t_memory"] = rec["bytes_per_device"] / hw.hbm_bw
+        dominant = max(("t_compute", "t_memory", "t_collective"),
+                       key=lambda k: rec[k])
+        rec["bottleneck"] = dominant
+        # useful work: the SPARTan flop count (Procrustes + 3 MTTKRPs + grams)
+        nnz_padded = sum(kb * ip * cp for kb, ip, cp in geom)
+        useful = (6.0 * nnz_padded * R + 10.0 * K * R * R) / n_chips
+        rec["model_flops_per_device"] = useful
+        rec["useful_fraction"] = useful / terms["hlo_flops"] if terms["hlo_flops"] else 0.0
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# sweep driver with JSON result cache
+# ---------------------------------------------------------------------------
+
+def load_results(path: str) -> Dict[str, Any]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(path: str, results: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    os.replace(tmp, path)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=os.path.normpath(RESULTS_PATH))
+    ap.add_argument("--parafac2", action="store_true", help="also run paper-workload cells")
+    ap.add_argument("--sp", action="store_true", help="sequence-parallel residual stream (hillclimb)")
+    ap.add_argument("--remat-policy", default="", help="override cfg.remat_policy (hillclimb)")
+    ap.add_argument("--microbatches", type=int, default=1, help="gradient accumulation (train cells)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+
+    results = load_results(args.out)
+    results.setdefault("_meta", {})["flops_convention"] = (
+        calibrate_flops_convention(meshes[0][1]))
+
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = applicable_shapes(cfg) if args.shape == "all" else [args.shape]
+            for shape_name in shapes:
+                key = (f"{arch}|{shape_name}|{mesh_name}" + ("+sp" if args.sp else "")
+                       + (f"+{args.remat_policy}" if args.remat_policy else "")
+                       + (f"+mb{args.microbatches}" if args.microbatches > 1 else ""))
+                if key in results and not args.force:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_name,
+                                   roofline=(mesh_name == "pod16x16"), sp=args.sp,
+                                   remat_policy=args.remat_policy,
+                                   microbatches=args.microbatches)
+                    results[key] = rec
+                    save_results(args.out, results)
+                    detail = (f"t_comp={rec['t_compute']*1e3:.2f}ms "
+                              f"t_mem={rec['t_memory']*1e3:.2f}ms "
+                              f"t_coll={rec['t_collective']*1e3:.2f}ms "
+                              f"bottleneck={rec['bottleneck']} "
+                              if "t_compute" in rec else "")
+                    print(f"[dryrun] {key}: OK {detail}"
+                          f"bytes/dev={rec['bytes_per_device']/2**30:.2f}GiB "
+                          f"(compile {rec['compile_s']:.0f}s)", flush=True)
+                except Exception as e:  # a failing cell is a bug to fix
+                    failures.append((key, repr(e)))
+                    print(f"[dryrun] {key}: FAIL {e}", flush=True)
+                    if not args.quiet:
+                        traceback.print_exc()
+        if args.parafac2:
+            for cell in PARAFAC2_CELLS:
+                key = f"{cell}|als_step|{mesh_name}"
+                if key in results and not args.force:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_parafac2_cell(cell, mesh, mesh_name)
+                    results[key] = rec
+                    save_results(args.out, results)
+                    print(f"[dryrun] {key}: OK bottleneck={rec['bottleneck']} "
+                          f"(compile {rec['compile_s']:.0f}s)", flush=True)
+                except Exception as e:
+                    failures.append((key, repr(e)))
+                    print(f"[dryrun] {key}: FAIL {e}", flush=True)
+                    if not args.quiet:
+                        traceback.print_exc()
+
+    n_ok = len([k for k in results if not k.startswith("_")])
+    print(f"[dryrun] done: {n_ok} cells recorded, {len(failures)} failures")
+    for k, e in failures:
+        print(f"  FAIL {k}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

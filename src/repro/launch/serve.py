@@ -1,0 +1,89 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduce \
+      --batch 4 --prompt-len 16 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import build
+
+
+def sample_token(logits: jax.Array, rng: jax.Array, *, temperature: float = 0.0,
+                 top_k: int = 0) -> jax.Array:
+    """Greedy (temperature 0) or temperature/top-k sampling. logits [B,1,V]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    x = logits[:, -1, :].astype(jnp.float32) / temperature
+    if top_k:
+        kth = jnp.sort(x, axis=-1)[:, -top_k][:, None]
+        x = jnp.where(x < kth, -jnp.inf, x)
+    tok = jax.random.categorical(rng, x, axis=-1)
+    return tok[:, None].astype(jnp.int32)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg)
+    bundle = build(cfg)
+    rng = jax.random.PRNGKey(args.seed)
+    params = bundle.init_params(rng)
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    prompts = jax.random.randint(rng, (B, P), 0, cfg.vocab_size)
+    max_len = P + G
+    cache = bundle.init_cache(B, max_len)
+    decode = jax.jit(bundle.decode_step)
+
+    # prefill by teacher-forcing the prompt through the decode path (fills
+    # the cache position by position; a production server would use a fused
+    # prefill kernel — measured separately by the prefill_32k cells)
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(P):
+        logits, cache = decode(params, cache, prompts[:, t : t + 1], jnp.asarray(t))
+    prefill_s = time.perf_counter() - t0
+
+    out_tokens = []
+    sample_rng = jax.random.PRNGKey(args.seed + 1)
+    tok = sample_token(logits, sample_rng, temperature=args.temperature,
+                       top_k=args.top_k)
+    t0 = time.perf_counter()
+    for g in range(G):
+        out_tokens.append(tok)
+        logits, cache = decode(params, cache, tok, jnp.asarray(P + g))
+        sample_rng, sub = jax.random.split(sample_rng)
+        tok = sample_token(logits, sub, temperature=args.temperature,
+                           top_k=args.top_k)
+    jax.block_until_ready(logits)
+    decode_s = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    tput = B * G / decode_s
+    print(f"[serve] batch={B} prompt={P} gen={G}")
+    print(f"[serve] prefill {prefill_s*1e3:.1f} ms; decode {decode_s*1e3:.1f} ms "
+          f"({tput:.1f} tok/s)")
+    print(f"[serve] sample continuation: {gen[0, :8].tolist()}")
+    return {"tokens_per_s": tput, "generated": gen}
+
+
+if __name__ == "__main__":
+    main()

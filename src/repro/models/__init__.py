@@ -1,0 +1,3 @@
+from repro.models.api import ModelBundle, build, cross_entropy
+
+__all__ = ["ModelBundle", "build", "cross_entropy"]

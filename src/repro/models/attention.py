@@ -1,0 +1,197 @@
+"""Attention: GQA with RoPE / qk-norm / sliding-window, in three lowerings.
+
+* ``attend_train``  — memory-bounded chunked (flash-style online-softmax over
+  key blocks, pure JAX scan) causal attention. Activation memory is O(S * Bq)
+  instead of O(S^2), which is what makes the 32k-prefill shapes lowerable with
+  a credible memory footprint.
+* ``attend_decode`` — single-query attention against a KV cache.
+* cross-attention (whisper) reuses the chunked path without the causal mask.
+
+All functions are batched [B, S, H, D] and GQA-aware (n_kv <= n_heads;
+q heads grouped over kv heads). No dropout (pretraining-style).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, rmsnorm
+from repro.dist.sharding import shard
+
+__all__ = ["attend_train", "attend_decode", "AttnParams", "init_attn", "attn_block"]
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(k: jax.Array, groups: int) -> jax.Array:
+    """[B, S, KV, D] -> [B, S, KV*groups, D] by repeating kv heads."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def attend_train(
+    q: jax.Array,               # [B, Sq, H, D]
+    k: jax.Array,               # [B, Skv, KV, D]
+    v: jax.Array,               # [B, Skv, KV, D]
+    *,
+    causal: bool = True,
+    window: int = 0,            # sliding window (0 = full)
+    q_offset: int = 0,          # absolute position of q[0] relative to k[0]
+    block_kv: int = 1024,
+) -> jax.Array:
+    """Chunked online-softmax attention (flash-style, pure JAX)."""
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    k = _gqa_expand(k, groups)
+    v = _gqa_expand(v, groups)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+
+    nb = max(1, (Skv + block_kv - 1) // block_kv)
+    pad = nb * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, block_kv, H, D)
+    vb = v.reshape(B, nb, block_kv, H, D)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, bidx = blk
+        k_pos = bidx * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32))
+        mask = k_pos[None, :] <= Skv - 1  # drop padded keys
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    blks = (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nb))
+    from repro.dist.sharding import unroll_active
+
+    if unroll_active():
+        carry = (m0, l0, acc0)
+        for i in range(nb):
+            carry, _ = body(carry, jax.tree_util.tree_map(lambda a: a[i], blks))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), blks)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)   # [B, Sq, H, D]
+
+
+def attend_decode(
+    q: jax.Array,               # [B, 1, H, D]
+    k_cache: jax.Array,         # [B, Skv, KV, D]
+    v_cache: jax.Array,
+    *,
+    length: jax.Array,          # [B] valid cache lengths (new token already in)
+    window: int = 0,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    Skv, KV = k_cache.shape[1], k_cache.shape[2]
+    groups = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qf = (q.astype(jnp.float32) * scale).reshape(B, H, D)
+    qg = qf.reshape(B, KV, groups, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(Skv)
+    mask = pos[None, :] < length[:, None]
+    if window:
+        mask = mask & (pos[None, :] >= length[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (qkv proj + rope + attend + out proj)
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg, dtype) -> dict:
+    from repro.models.common import dense_init
+
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, KV * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, KV * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H * hd, d), scale=1.0 / jnp.sqrt(H * hd * 2.0 * max(cfg.n_layers, 1)), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm_scale"] = jnp.zeros((hd,), dtype)
+        p["k_norm_scale"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attn_block(
+    p: dict,
+    x: jax.Array,                       # [B, S, d]
+    cfg,
+    *,
+    positions: jax.Array,               # [S] or [B, S]
+    causal: bool = True,
+    window: int = 0,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # decode
+    cache_length: Optional[jax.Array] = None,
+    cache_index: Optional[jax.Array] = None,                  # scalar write slot
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,   # enc-dec
+    use_rope: bool = True,
+):
+    """Returns (out [B,S,d], new_kv_cache or None)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    q = shard(q, ("batch", "seq", "heads", None))
+    if cross_kv is None:
+        k = (x @ p["wk"]).reshape(B, S, KV, hd)
+        v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm_scale"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rmsnorm(k, p["k_norm_scale"], cfg.norm_eps)
+    if use_rope and cross_kv is None:
+        if positions.ndim == 1:
+            positions = positions[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        # decode: write this step's k/v into the cache ring
+        kc, vc = kv_cache
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, cache_index, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, cache_index, 0, 0))
+        new_cache = (kc, vc)
+        out = attend_decode(q, kc, vc, length=cache_length, window=window)
+    elif cross_kv is not None:
+        out = attend_train(q, k, v, causal=False)
+    else:
+        out = attend_train(q, k, v, causal=causal, window=window)
+    out = shard(out, ("batch", "seq", "heads", None))
+    y = out.reshape(B, S, H * hd) @ p["wo"]
+    from jax.ad_checkpoint import checkpoint_name
+    y = checkpoint_name(y, "block_out")
+    return shard(y, ("batch", "seq_res", "embed")), new_cache

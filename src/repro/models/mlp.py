@@ -1,0 +1,39 @@
+"""Dense MLP blocks: SwiGLU (llama-family) and GELU (whisper/older)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init
+from repro.dist.sharding import shard
+
+__all__ = ["init_mlp", "mlp_block"]
+
+
+def init_mlp(key, cfg, dtype, d_ff=None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    down_scale = 1.0 / jnp.sqrt(f * 2.0 * max(cfg.n_layers, 1))
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d, f), dtype=dtype),
+            "w_up": dense_init(ks[1], (d, f), dtype=dtype),
+            "w_down": dense_init(ks[2], (f, d), scale=down_scale, dtype=dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, f), dtype=dtype),
+        "w_down": dense_init(ks[1], (f, d), scale=down_scale, dtype=dtype),
+    }
+
+
+def mlp_block(p: dict, x: jax.Array, cfg) -> jax.Array:
+    act = act_fn(cfg.act)
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = act(x @ p["w_up"])
+    h = shard(h, ("batch", "seq", "mlp"))
+    y = h @ p["w_down"]
+    from jax.ad_checkpoint import checkpoint_name
+    y = checkpoint_name(y, "block_out")
+    return shard(y, ("batch", "seq_res", "embed"))

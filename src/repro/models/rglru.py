@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ u_t)
+
+Train/prefill uses an associative scan (log-space first-order recurrence);
+decode is the O(1) elementwise update. The full recurrent block is
+conv1d -> RG-LRU on one branch, gated by a GeLU branch (Griffin Fig. 2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.dist.sharding import shard
+
+__all__ = ["init_rglru", "rglru_block", "init_rglru_cache", "rglru_scan"]
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype=dtype),        # recurrent branch
+        "w_gate_branch": dense_init(ks[1], (d, w), dtype=dtype),
+        "conv": {"w": dense_init(ks[2], (cfg.conv_width, w), dtype=dtype),
+                 "b": jnp.zeros((w,), dtype)},
+        "wa": dense_init(ks[3], (w, w), scale=0.02, dtype=dtype),
+        "wx": dense_init(ks[4], (w, w), scale=0.02, dtype=dtype),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "bx": jnp.zeros((w,), jnp.float32),
+        # Lambda init so a^c is in (0.9, 0.999) at r=1 — Griffin's init range
+        "a_param": jnp.full((w,), 0.7, jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), scale=1.0 / jnp.sqrt((w) * 2.0 * max(cfg.n_layers, 1)), dtype=dtype),
+    }
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None):
+    """First-order recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    a, b: [B, S, W]. Returns h [B, S, W] (h0 folded into the first element).
+    """
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def init_rglru_cache(cfg, batch: int, dtype=jnp.float32):
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_block(p: dict, x: jax.Array, cfg, *, cache: Optional[dict] = None):
+    """Griffin recurrent block. Returns (y [B,S,d], new_cache or None)."""
+    from repro.models.ssm import _causal_conv
+
+    B, S, d = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    u = x @ p["w_in"]
+    u = shard(u, ("batch", "seq", "mlp"))
+
+    if cache is not None and S == 1:
+        conv_out, conv_state = _causal_conv(u, p["conv"]["w"], p["conv"]["b"],
+                                            state=cache["conv"])
+    else:
+        conv_out, conv_state = _causal_conv(u, p["conv"]["w"], p["conv"]["b"])
+    uc = conv_out.astype(jnp.float32)
+
+    r = jax.nn.sigmoid(uc @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(uc @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["a_param"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uc)
+
+    new_cache = None
+    if cache is not None and S == 1:
+        h = a[:, 0] * cache["h"] + gated_in[:, 0]
+        hs = h[:, None, :]
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype), "h": h}
+    else:
+        h0 = cache["h"] if cache is not None else None
+        hs = rglru_scan(a, gated_in, h0)
+        if cache is not None:
+            new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                         "h": hs[:, -1, :]}
+
+    y = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    return shard(y, ("batch", "seq_res", "embed")), new_cache

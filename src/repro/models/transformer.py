@@ -1,0 +1,394 @@
+"""Unified decoder stack: pattern-based blocks + scan-over-groups.
+
+Every architecture is a repeating ``pattern`` of block kinds:
+  dense        ("attn_mlp",)
+  qwen3        ("attn_mlp",) + qk_norm
+  phi3.5-moe   ("attn_moe",)
+  llama4       ("attn_mlp", "attn_moe")          # interleaved MoE
+  recurrentgemma ("rglru", "rglru", "attn_local")
+  mamba2       ("mamba",)
+  whisper dec  ("attn_cross_mlp",)
+
+The layer loop is `lax.scan` over `n_layers // len(pattern)` groups (stacked
+params, compact HLO, optional remat per group); remainder layers run unrolled
+at the tail. KV/recurrent caches are pytrees stacked the same way, so decode
+steps scan over (param, cache) slices and emit updated caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import shard
+from repro.models.common import dense_init, rmsnorm
+from repro.models.attention import attn_block, init_attn
+from repro.models.mlp import init_mlp, mlp_block
+from repro.models.moe import init_moe, moe_block
+from repro.models.ssm import init_mamba, init_mamba_cache, mamba_block
+from repro.models.rglru import init_rglru, init_rglru_cache, rglru_block
+
+__all__ = [
+    "default_pattern",
+    "init_stack",
+    "stack_forward",
+    "init_cache",
+    "stack_decode",
+    "init_lm",
+    "lm_forward",
+    "lm_decode",
+]
+
+ATTN_KINDS = ("attn_mlp", "attn_local", "attn_moe", "attn_cross_mlp", "enc_attn_mlp")
+
+
+def default_pattern(cfg: ArchConfig) -> Tuple[str, ...]:
+    if cfg.block_pattern:
+        return cfg.block_pattern
+    if cfg.family == "ssm":
+        return ("mamba",)
+    if cfg.family == "moe" and cfg.n_experts:
+        return ("attn_moe",)
+    return ("attn_mlp",)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(kind: str, key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn_mlp", "attn_local", "enc_attn_mlp"):
+        return {"ln1_scale": jnp.zeros((d,), dtype), "attn": init_attn(ks[0], cfg, dtype),
+                "ln2_scale": jnp.zeros((d,), dtype), "mlp": init_mlp(ks[1], cfg, dtype)}
+    if kind == "attn_moe":
+        return {"ln1_scale": jnp.zeros((d,), dtype), "attn": init_attn(ks[0], cfg, dtype),
+                "ln2_scale": jnp.zeros((d,), dtype), "moe": init_moe(ks[1], cfg, dtype)}
+    if kind == "attn_cross_mlp":
+        return {"ln1_scale": jnp.zeros((d,), dtype), "attn": init_attn(ks[0], cfg, dtype),
+                "lnx_scale": jnp.zeros((d,), dtype), "cross": init_attn(ks[1], cfg, dtype),
+                "ln2_scale": jnp.zeros((d,), dtype), "mlp": init_mlp(ks[2], cfg, dtype)}
+    if kind == "mamba":
+        return {"ln1_scale": jnp.zeros((d,), dtype), "mamba": init_mamba(ks[0], cfg, dtype)}
+    if kind == "rglru":
+        return {"ln1_scale": jnp.zeros((d,), dtype), "rec": init_rglru(ks[0], cfg, dtype),
+                "ln2_scale": jnp.zeros((d,), dtype), "mlp": init_mlp(ks[1], cfg, dtype)}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def apply_block(
+    kind: str,
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: ArchConfig,
+    ctx: Dict[str, Any],
+    cache: Optional[Dict[str, Any]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    # SP boundary: the seq all-gather happens on the bf16 norm output (pinning
+    # it on the residual itself makes GSPMD propagate the full-seq layout into
+    # the whole stream — measured 3.7x memory regression, see §Perf log).
+    h = rmsnorm(x, p["ln1_scale"], cfg.norm_eps)
+    h = shard(h, ("batch", "seq", "embed"))
+    window = cfg.local_window if kind == "attn_local" else 0
+    causal = kind != "enc_attn_mlp"
+    if kind in ATTN_KINDS:
+        kv = cache.get("self") if cache else None
+        cache_length, cache_slot, decode_window = ctx.get("cache_length"), ctx.get("cache_slot"), 0
+        if kv is not None and kind == "attn_local" and window:
+            # ring buffer: cache holds only the last `window` keys; slot wraps,
+            # validity count saturates, and no extra window mask is needed.
+            W = kv[0].shape[1]
+            pos = ctx["pos"]
+            cache_slot = pos % W
+            cache_length = jnp.broadcast_to(jnp.minimum(pos + 1, W), (x.shape[0],))
+        elif kv is None:
+            decode_window = 0
+        y, new_self = attn_block(
+            p["attn"], h, cfg,
+            positions=ctx["positions"], causal=causal, window=window if kv is None else decode_window,
+            kv_cache=kv, cache_length=cache_length,
+            cache_index=cache_slot,
+        )
+        x = x + y
+        new_cache = {"self": new_self} if new_self is not None else ({} if cache else None)
+        if kind == "attn_cross_mlp":
+            hx = rmsnorm(x, p["lnx_scale"], cfg.norm_eps)
+            cross_kv = cache.get("cross") if cache else ctx.get("cross_kv_fn")(p["cross"])
+            y, _ = attn_block(p["cross"], hx, cfg, positions=ctx["positions"],
+                              cross_kv=cross_kv, use_rope=False)
+            x = x + y
+            if new_cache is not None:
+                new_cache["cross"] = cross_kv
+        h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+        h2 = shard(h2, ("batch", "seq", "embed"))   # SP boundary on bf16
+        if kind == "attn_moe":
+            # barrier: keep the bf16 cast of h2 on THIS side of the dispatch
+            # gathers (XLA otherwise hoists the f32->bf16 convert past the
+            # all-gather, doubling dispatch bytes).
+            y, aux = moe_block(p["moe"], jax.lax.optimization_barrier(h2), cfg)
+        else:
+            y = mlp_block(p["mlp"], h2, cfg)
+        x = x + y
+        return x, new_cache, aux
+    if kind == "mamba":
+        y, new_cache = mamba_block(p["mamba"], h, cfg, cache=cache)
+        return x + y, new_cache, aux
+    if kind == "rglru":
+        y, new_cache = rglru_block(p["rec"], h, cfg, cache=cache)
+        x = x + y
+        h2 = rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+        h2 = shard(h2, ("batch", "seq", "embed"))   # SP boundary on bf16
+        return x + mlp_block(p["mlp"], h2, cfg), new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stack init / forward / decode
+# ---------------------------------------------------------------------------
+
+def _group_counts(cfg: ArchConfig, n_layers: int) -> Tuple[Tuple[str, ...], int, int]:
+    pattern = default_pattern(cfg)
+    g = n_layers // len(pattern)
+    rem = n_layers % len(pattern)
+    return pattern, g, rem
+
+
+def init_stack(key, cfg: ArchConfig, dtype, *, n_layers: Optional[int] = None,
+               encoder: bool = False) -> Dict[str, Any]:
+    n_layers = n_layers or cfg.n_layers
+    pattern = ("enc_attn_mlp",) if encoder else default_pattern(cfg)
+    g = n_layers // len(pattern)
+    rem = n_layers % len(pattern)
+    keys = jax.random.split(key, len(pattern) + max(rem, 1))
+    groups = {}
+    for pos, kind in enumerate(pattern):
+        sub = jax.random.split(keys[pos], max(g, 1))
+        stacked = [init_block(kind, sub[i], cfg, dtype) for i in range(g)]
+        groups[f"p{pos}_{kind}"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *stacked) if g else {}
+    rem_params = [init_block(pattern[i], keys[len(pattern) + i], cfg, dtype)
+                  for i in range(rem)]
+    return {"groups": groups, "rem": rem_params}
+
+
+def _stack_meta(cfg: ArchConfig, n_layers: Optional[int], encoder: bool):
+    n_layers = n_layers or cfg.n_layers
+    pattern = ("enc_attn_mlp",) if encoder else default_pattern(cfg)
+    g = n_layers // len(pattern)
+    rem = n_layers % len(pattern)
+    return pattern, g, rem
+
+
+def stack_forward(stack_params, x, cfg: ArchConfig, ctx, *,
+                  n_layers: Optional[int] = None,
+                  encoder: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Train/prefill forward through the whole stack. Returns (x, aux_sum)."""
+    pattern, g, rem = _stack_meta(cfg, n_layers, encoder)
+
+    def group_fn(x, slices):
+        aux_g = jnp.zeros((), jnp.float32)
+        for pos, kind in enumerate(pattern):
+            p = slices[f"p{pos}_{kind}"]
+            x, _, aux = apply_block(kind, p, x, cfg, ctx)
+            aux_g = aux_g + aux
+        return x, aux_g
+
+    if cfg.remat:
+        if cfg.remat_policy == "save_block_outputs":
+            # block outputs are seq-sharded under SP (tiny): saving them skips
+            # the recompute-side all-gathers in the backward pass.
+            policy = jax.checkpoint_policies.save_only_these_names("block_out")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        group_fn = jax.checkpoint(group_fn, policy=policy)
+
+    def body(carry, slices):
+        x, aux_acc = carry
+        x, aux_g = group_fn(x, slices)
+        return (x, aux_acc + aux_g), None
+
+    from repro.dist.sharding import unroll_active
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if g and unroll_active():
+        for i in range(g):
+            slices = jax.tree_util.tree_map(lambda a: a[i], stack_params["groups"])
+            x, aux_g = group_fn(x, slices)
+            aux0 = aux0 + aux_g
+    elif g:
+        (x, aux0), _ = jax.lax.scan(body, (x, aux0), stack_params["groups"])
+    for i in range(rem):
+        x, _, aux = apply_block(pattern[i], stack_params["rem"][i], x, cfg, ctx)
+        aux0 = aux0 + aux
+    return x, aux0
+
+
+def _init_block_cache(kind, cfg: ArchConfig, batch: int, max_len: int, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if kind in ("attn_mlp", "attn_moe", "enc_attn_mlp"):
+        shp = (batch, max_len, KV, hd)
+        return {"self": (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))}
+    if kind == "attn_local":
+        w = min(cfg.local_window or max_len, max_len)
+        shp = (batch, w, KV, hd)
+        return {"self": (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))}
+    if kind == "attn_cross_mlp":
+        shp = (batch, max_len, KV, hd)
+        xshp = (batch, cfg.encoder_seq, KV, hd)
+        return {"self": (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype)),
+                "cross": (jnp.zeros(xshp, dtype), jnp.zeros(xshp, dtype))}
+    if kind == "mamba":
+        return init_mamba_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               *, n_layers: Optional[int] = None):
+    n_layers = n_layers or cfg.n_layers
+    pattern, g, rem = _group_counts(cfg, n_layers)
+    groups = {}
+    for pos, kind in enumerate(pattern):
+        single = _init_block_cache(kind, cfg, batch, max_len, dtype)
+        groups[f"p{pos}_{kind}"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (g,) + a.shape), single) if g else {}
+    rem_caches = [_init_block_cache(pattern[i], cfg, batch, max_len, dtype)
+                  for i in range(rem)]
+    return {"groups": groups, "rem": rem_caches}
+
+
+def stack_decode(stack_params, cache, x, cfg: ArchConfig, ctx):
+    """One decode step. Returns (x, new_cache)."""
+    pattern, g, rem = _stack_meta(cfg, None, False)
+
+    def body(x, slices):
+        p_slices, c_slices = slices
+        new_c = {}
+        for pos, kind in enumerate(pattern):
+            key = f"p{pos}_{kind}"
+            x, nc, _ = apply_block(kind, p_slices[key], x, cfg, ctx, cache=c_slices[key])
+            new_c[key] = nc if nc is not None else c_slices[key]
+        return x, new_c
+
+    from repro.dist.sharding import unroll_active
+
+    if g and unroll_active():
+        outs = []
+        for i in range(g):
+            slc = jax.tree_util.tree_map(lambda a: a[i],
+                                         (stack_params["groups"], cache["groups"]))
+            x, nc = body(x, slc)
+            outs.append(nc)
+        new_groups = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    elif g:
+        x, new_groups = jax.lax.scan(body, x, (stack_params["groups"], cache["groups"]))
+    else:
+        new_groups = cache["groups"]
+    new_rem = []
+    for i in range(rem):
+        x, nc, _ = apply_block(pattern[i], stack_params["rem"][i], x, cfg, ctx,
+                               cache=cache["rem"][i])
+        new_rem.append(nc if nc is not None else cache["rem"][i])
+    return x, {"groups": new_groups, "rem": new_rem}
+
+
+# ---------------------------------------------------------------------------
+# Full language model (embed -> stack -> norm -> head)
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    params = {
+        "embed": {"tokens": dense_init(ks[0], (cfg.vocab_size, d), scale=0.02, dtype=dtype)},
+        "layers": init_stack(ks[1], cfg, dtype),
+        "final_norm_scale": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], (d, cfg.vocab_size), dtype=dtype)
+    if cfg.n_prefix_embeds:
+        params["patch_proj"] = dense_init(ks[3], (d, d), dtype=dtype)
+    if cfg.is_encdec:
+        params["encoder"] = init_stack(ks[3], cfg, dtype,
+                                       n_layers=cfg.encoder_layers, encoder=True)
+        params["enc_norm_scale"] = jnp.zeros((d,), dtype)
+    return params
+
+
+def _embed(params, tokens, cfg, prefix_embeds=None):
+    x = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+    if cfg.n_prefix_embeds and prefix_embeds is not None:
+        proj = prefix_embeds.astype(x.dtype) @ params["patch_proj"]
+        n = cfg.n_prefix_embeds
+        pos_mask = (jnp.arange(x.shape[1]) < n)[None, :, None]
+        pe = jnp.zeros_like(x).at[:, :n, :].set(proj[:, :n, :])
+        x = jnp.where(pos_mask, pe, x)
+    return shard(x, ("batch", "seq_res", "embed"))
+
+
+def _head(params, x, cfg):
+    x = rmsnorm(x, params["final_norm_scale"], cfg.norm_eps)
+    head = params["embed"]["tokens"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return shard(logits, ("batch", "seq", "vocab"))
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """Whisper-style encoder over precomputed frame embeddings (conv stub)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = shard(x, ("batch", "seq_res", "embed"))
+    ctx = {"positions": jnp.arange(x.shape[1])}
+    x, _ = stack_forward(params["encoder"], x, cfg, ctx,
+                         n_layers=cfg.encoder_layers, encoder=True)
+    return rmsnorm(x, params["enc_norm_scale"], cfg.norm_eps)
+
+
+def lm_forward(params, tokens, cfg: ArchConfig, *, prefix_embeds=None,
+               encoder_frames=None):
+    """Train/prefill forward. Returns (logits, aux_loss)."""
+    x = _embed(params, tokens, cfg, prefix_embeds)
+    ctx = {"positions": jnp.arange(tokens.shape[1])}
+    if cfg.is_encdec:
+        enc = encode(params, encoder_frames, cfg)
+
+        def cross_kv_fn_factory(enc):
+            def fn(p_cross):
+                B, F, d = enc.shape
+                KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+                k = (enc @ p_cross["wk"]).reshape(B, F, KV, hd)
+                v = (enc @ p_cross["wv"]).reshape(B, F, KV, hd)
+                return k, v
+            return fn
+
+        ctx["cross_kv_fn"] = cross_kv_fn_factory(enc)
+    x, aux = stack_forward(params["layers"], x, cfg, ctx)
+    return _head(params, x, cfg), aux
+
+
+def lm_decode(params, cache, tokens, cfg: ArchConfig, *, pos: jax.Array):
+    """One decode step for the whole batch (aligned streams at position `pos`).
+
+    tokens [B, 1]; pos scalar absolute position. Returns (logits, new_cache).
+    """
+    x = _embed(params, tokens, cfg)
+    # ring-buffer slot for local attention; absolute slot for global
+    ctx = {
+        "positions": jnp.asarray(pos)[None, None],   # rope position, [1,1]
+        "cache_length": None,                        # filled per-kind below
+        "cache_slot": None,
+        "pos": pos,
+    }
+    # cache_length/slot depend on kind (ring vs linear); pass both variants and
+    # let apply_block pick via ctx. We set linear defaults; attn_local uses ring.
+    ctx["cache_length"] = jnp.broadcast_to(pos + 1, (tokens.shape[0],))
+    ctx["cache_slot"] = pos
+    x, new_cache = stack_decode(params["layers"], cache, x, cfg, ctx)
+    return _head(params, x, cfg), new_cache

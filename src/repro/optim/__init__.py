@@ -1,0 +1,18 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule, wsd_schedule
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compress import compressed_psum, dequantize, ef_compress_update, quantize
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "wsd_schedule",
+    "clip_by_global_norm",
+    "global_norm",
+    "compressed_psum",
+    "dequantize",
+    "ef_compress_update",
+    "quantize",
+]

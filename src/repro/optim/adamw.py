@@ -1,0 +1,70 @@
+"""Decoupled AdamW, pure pytree implementation.
+
+First/second moments are f32 regardless of param dtype (bf16-safe); the
+update is computed in f32 and cast back. State shards exactly like params
+(path-based rules in repro.dist.sharding add the fsdp axis), giving ZeRO-style
+optimizer-state partitioning under pjit for free.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr,
+    wd: float = 0.1,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    clip_norm: float = 1.0,
+) -> Tuple[Any, AdamWState]:
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if clip_norm:
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * (g * g)
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if jnp.issubdtype(p.dtype, jnp.floating):
+            delta = delta + wd * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,35 @@
+"""LR schedules: WSD (warmup-stable-decay, MiniCPM) and cosine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["wsd_schedule", "cosine_schedule"]
+
+
+def wsd_schedule(*, peak: float, warmup: int, total: int, decay_frac: float = 0.1,
+                 floor: float = 0.0):
+    """Warmup-Stable-Decay (arXiv:2404.06395): linear warmup, long stable
+    plateau at `peak`, then a short exponential-style decay tail."""
+    decay_steps = max(1, int(total * decay_frac))
+    stable_end = total - decay_steps
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        tail = peak * jnp.exp(-5.0 * (step - stable_end) / decay_steps)
+        lr = jnp.where(step < warmup, warm,
+                       jnp.where(step < stable_end, peak, jnp.maximum(tail, floor)))
+        return lr
+
+    return sched
+
+
+def cosine_schedule(*, peak: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched

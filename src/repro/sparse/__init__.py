@@ -1,0 +1,18 @@
+from repro.sparse.coo import (
+    IrregularCOO,
+    SubjectCOO,
+    from_dense_slices,
+    random_irregular,
+    random_parafac2,
+)
+from repro.sparse.bucketing import BucketPlan, plan_buckets
+
+__all__ = [
+    "IrregularCOO",
+    "SubjectCOO",
+    "from_dense_slices",
+    "random_irregular",
+    "random_parafac2",
+    "BucketPlan",
+    "plan_buckets",
+]

@@ -1,0 +1,87 @@
+"""Size-bucketing planner: ragged subjects -> a few static-shape buckets.
+
+XLA needs static shapes. Subjects vary in row count I_k and nonzero-column
+count c_k; we group them into buckets whose padded (I_pad, C_pad) geometry is
+chosen to bound padding waste while keeping the number of distinct compiled
+shapes small. Pad targets are rounded up to multiples of ``row_align`` /
+``col_align`` (8 / 128 by default — TPU sublane/lane quanta).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+import numpy as np
+
+__all__ = ["BucketPlan", "plan_buckets"]
+
+
+def _round_up(x: int, align: int) -> int:
+    return max(align, ((int(x) + align - 1) // align) * align)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Assignment of subject indices to padded-shape buckets."""
+
+    # per bucket: (I_pad, C_pad) and the member subject indices
+    shapes: List[tuple]          # [(I_pad, C_pad)]
+    members: List[np.ndarray]    # [int32 arrays of subject ids]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.shapes)
+
+    def padding_waste(self, row_counts: Sequence[int], col_counts: Sequence[int]) -> float:
+        """Fraction of padded cells that are padding (area metric)."""
+        used = 0
+        total = 0
+        for (ip, cp), mem in zip(self.shapes, self.members):
+            for k in mem:
+                used += int(row_counts[k]) * int(col_counts[k])
+                total += ip * cp
+        return 1.0 - used / max(total, 1)
+
+
+def plan_buckets(
+    row_counts: Sequence[int],
+    col_counts: Sequence[int],
+    *,
+    max_buckets: int = 4,
+    row_align: int = 8,
+    col_align: int = 8,
+) -> BucketPlan:
+    """Greedy quantile bucketing on (I_k, c_k).
+
+    Sort subjects by padded area and split into ``max_buckets`` contiguous
+    groups of (roughly) equal count; each bucket pads to its member max.
+    Simple, deterministic, and bounds waste well for the skewed long-tail
+    distributions typical of EHR data.
+    """
+    rc = np.asarray(row_counts, dtype=np.int64)
+    cc = np.asarray(col_counts, dtype=np.int64)
+    if rc.shape != cc.shape or rc.ndim != 1 or rc.size == 0:
+        raise ValueError("row_counts/col_counts must be equal-length 1-D, non-empty")
+    n = rc.size
+    order = np.argsort(rc * cc, kind="stable")
+    n_buckets = int(min(max_buckets, n))
+    splits = np.array_split(order, n_buckets)
+    shapes, members = [], []
+    for grp in splits:
+        if grp.size == 0:
+            continue
+        ip = _round_up(int(rc[grp].max()), row_align)
+        cp = _round_up(int(cc[grp].max()), col_align)
+        shapes.append((ip, cp))
+        members.append(grp.astype(np.int32))
+    # merge buckets that ended up with identical shapes (compile-shape dedupe)
+    merged: dict = {}
+    for s, m in zip(shapes, members):
+        if s in merged:
+            merged[s] = np.concatenate([merged[s], m])
+        else:
+            merged[s] = m
+    shapes = list(merged.keys())
+    members = [merged[s] for s in shapes]
+    return BucketPlan(shapes=shapes, members=members)

@@ -1,0 +1,14 @@
+"""Shared test fixtures. NOTE: do NOT set XLA_FLAGS device-count here — smoke
+tests and benchmarks must see the single real CPU device; only the dry-run
+(launch/dryrun.py, run as its own process) uses 512 placeholder devices."""
+import jax
+import pytest
+
+# Numerical tests on the decomposition core need f64 to assert tight algebra
+# identities; model smoke tests use explicit f32/bf16 dtypes so are unaffected.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng_seed():
+    return 1234

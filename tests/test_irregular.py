@@ -1,0 +1,84 @@
+"""CC/BCC format correctness: round-trips, bucketing invariants."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import random_irregular, plan_buckets, from_dense_slices
+from repro.core import bucketize, to_block_bucket, LANE
+
+
+def test_cc_roundtrip_dense():
+    data = random_irregular(n_subjects=8, n_cols=17, max_rows=9,
+                            avg_nnz_per_subject=20, seed=0)
+    bt = bucketize(data, max_buckets=2, dtype=jnp.float64)
+    seen = {}
+    for b in bt.buckets:
+        dense = b.scatter_cols_to_dense(jnp.transpose(b.vals, (0, 2, 1)).transpose(0, 2, 1), data.n_cols)
+        # vals [Kb, I, C] -> dense [Kb, I, J]
+        dense = b.scatter_cols_to_dense(b.vals, data.n_cols)
+        for slot in range(b.kb):
+            if float(b.subject_mask[slot]) > 0:
+                k = int(b.subject_ids[slot])
+                seen[k] = np.asarray(dense[slot, : int(b.row_counts[slot]), :])
+    assert len(seen) == data.n_subjects
+    for k, sub in enumerate(data.subjects):
+        np.testing.assert_allclose(seen[k], sub.to_dense(), atol=1e-12)
+
+
+def test_bucket_plan_partition():
+    rc = [3, 5, 9, 2, 14, 7, 7]
+    cc = [4, 4, 8, 2, 16, 8, 4]
+    plan = plan_buckets(rc, cc, max_buckets=3, row_align=4, col_align=4)
+    all_members = np.concatenate(plan.members)
+    assert sorted(all_members.tolist()) == list(range(7))
+    for (ip, cp), mem in zip(plan.shapes, plan.members):
+        assert ip % 4 == 0 and cp % 4 == 0
+        for k in mem:
+            assert rc[k] <= ip and cc[k] <= cp
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 30),
+    max_buckets=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+def test_property_bucket_partition(n, max_buckets, seed):
+    rng = np.random.default_rng(seed)
+    rc = rng.integers(1, 50, n)
+    cc = rng.integers(1, 30, n)
+    plan = plan_buckets(rc, cc, max_buckets=max_buckets)
+    members = np.concatenate(plan.members)
+    assert sorted(members.tolist()) == list(range(n))
+    waste = plan.padding_waste(rc, cc)
+    assert 0.0 <= waste < 1.0
+
+
+def test_bcc_matches_cc_product():
+    """BCC X_k V must equal CC X_k V (the kernel-format conversion is lossless
+    when max_blocks is not truncating)."""
+    data = random_irregular(n_subjects=6, n_cols=300, max_rows=10,
+                            avg_nnz_per_subject=40, seed=2)
+    bt = bucketize(data, max_buckets=1, dtype=jnp.float64)
+    b = bt.buckets[0]
+    R = 4
+    rng = np.random.default_rng(0)
+    V = jnp.asarray(rng.standard_normal((data.n_cols, R)))
+    ref = b.xk_times_v(V)
+    bb = to_block_bucket(b, data.n_cols)
+    # BCC product: sum over blocks of vals[k,:,b,:] @ V[blk*LANE:(blk+1)*LANE]
+    J_pad = ((data.n_cols + LANE - 1) // LANE) * LANE
+    V_pad = jnp.zeros((J_pad, R), V.dtype).at[: data.n_cols].set(V)
+    V_blocks = V_pad.reshape(-1, LANE, R)
+    Vg = V_blocks[bb.blk_ids] * bb.blk_mask[..., None, None]   # [Kb, NB, LANE, R]
+    out = jnp.einsum("kinl,knlr->kir", bb.vals, Vg)
+    np.testing.assert_allclose(out, ref, atol=1e-10)
+
+
+def test_from_dense_slices():
+    rng = np.random.default_rng(5)
+    slices = [rng.random((4, 6)) * (rng.random((4, 6)) < 0.5) for _ in range(3)]
+    data = from_dense_slices(slices)
+    for s, X in zip(data.subjects, slices):
+        np.testing.assert_allclose(s.to_dense(), X)

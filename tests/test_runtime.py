@@ -1,0 +1,172 @@
+"""Distributed-runtime substrate: checkpoint/restore (incl. elastic+atomic),
+fault handling, optimizer, schedules, gradient compression, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.data import TokenStream
+from repro.dist.fault import FaultInjector, StepWatchdog, TransientFault, run_with_retries
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    ef_compress_update,
+    dequantize,
+    quantize,
+    wsd_schedule,
+)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "layers": {"w": jnp.asarray(rng.standard_normal((4, 3))),
+                   "b": jnp.asarray(rng.standard_normal((3,)))},
+        "head": [jnp.asarray(rng.standard_normal((3, 5)))],
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t, extra={"data": {"seed": 1, "step": 7}})
+    restored, step, extra = ckpt.restore(str(tmp_path), t)
+    assert step == 7 and extra["data"]["step"] == 7
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(a, b), t, restored)
+
+
+def test_checkpoint_keeps_newest_and_prunes(tmp_path):
+    t = _tree()
+    for s in (10, 20, 30, 40):
+        ckpt.save(str(tmp_path), s, t, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [30, 40]
+    assert ckpt.latest_step(str(tmp_path)) == 40
+
+
+def test_checkpoint_ignores_corrupt_dir(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 5, t)
+    os.makedirs(tmp_path / "step_000000009")  # no meta.json -> damaged
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_restores_dtype(tmp_path):
+    t = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    ckpt.save(str(tmp_path), 1, t)
+    restored, _, _ = ckpt.restore(str(tmp_path), t)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_retry_recovers_from_transient():
+    inj = FaultInjector(fail_steps=(3,))
+    calls = []
+
+    def step(s):
+        inj.check(s)
+        calls.append(s)
+        return s * 2
+
+    assert run_with_retries(step, 3) == 6
+    assert calls == [3]  # failed once, then succeeded
+
+
+def test_retry_exhausts():
+    def always(_):
+        raise TransientFault("boom")
+
+    with pytest.raises(TransientFault):
+        run_with_retries(always, 0, max_retries=2)
+
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(factor=2.0)
+    for i in range(10):
+        wd.observe(i, 1.0)
+    assert wd.observe(10, 5.0) is True
+    assert 10 in wd.flagged
+    assert wd.observe(11, 1.1) is False
+
+
+# ---------------------------------------------------------------------------
+# optimizer + schedules
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw_update(params, grads, state, lr=0.05, wd=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_clip_global_norm():
+    g = {"a": jnp.ones((4,)) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_wsd_schedule_shape():
+    s = wsd_schedule(peak=1.0, warmup=10, total=100, decay_frac=0.2)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0)
+    assert float(s(50)) == pytest.approx(1.0)
+    assert float(s(99)) < 0.5
+
+
+def test_cosine_schedule_monotone_tail():
+    s = cosine_schedule(peak=1.0, warmup=5, total=50)
+    vals = [float(s(i)) for i in range(5, 50, 5)]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_quantize_dequantize_bounded_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = quantize(x)
+    err = jnp.abs(dequantize(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_accumulates_lost_mass():
+    """EF invariant: decoded + new_error == grad + old_error (lossless ledger)."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    e = jnp.asarray(rng.standard_normal(256) * 0.01, jnp.float32)
+    _, _, decoded, new_e = ef_compress_update(g, e)
+    np.testing.assert_allclose(decoded + new_e, g + e, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_tokenstream_deterministic_and_resumable():
+    a = TokenStream(vocab_size=100, batch=2, seq_len=8, seed=3)
+    b = TokenStream(vocab_size=100, batch=2, seq_len=8, seed=3)
+    b.restore(a.state())
+    for step in (0, 1, 5, 1000):
+        np.testing.assert_array_equal(a.batch_at(step)["tokens"],
+                                      b.batch_at(step)["tokens"])
+    ba = a.batch_at(4)
+    assert ba["tokens"].min() >= 1 and ba["tokens"].max() < 100
+    assert (ba["labels"][:, -1] == -1).all()
+    np.testing.assert_array_equal(ba["labels"][:, :-1], ba["tokens"][:, 1:])
