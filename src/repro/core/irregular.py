@@ -13,7 +13,9 @@ Two formats, both static-shape (XLA) and bucketed (see repro.sparse.bucketing):
   block gathers). Conversion CC -> BCC is provided.
 
 A :class:`Bucketed` value is a pytree (dict of buckets) usable under jit/pjit;
-subjects shard along the leading Kb axis of every per-bucket array.
+subjects shard along the leading Kb axis of every per-bucket array — the
+"subjects" rule in :mod:`repro.dist.sharding`. See docs/ARCHITECTURE.md
+(stage 2) for where these formats sit in the end-to-end data flow.
 """
 from __future__ import annotations
 

@@ -11,8 +11,11 @@ One ALS iteration (Algorithm 2 of the paper) on the bucketed CC format:
   4. Fit = 1 - sqrt(sum_k ||X_k - Q_k H S_k V^T||^2) / ||X||_F.
 
 Everything inside :func:`als_step` is jit/pjit-compatible; subjects shard over
-the leading bucket axis. ``mode1_reuse=True`` enables the beyond-paper
-optimization Y_k V = Q_k^T (X_k V) (cached from step 1).
+the leading bucket axis (the "subjects" rule in :mod:`repro.dist.sharding`;
+``launch/dryrun.py::run_parafac2_cell`` lowers this step on a production
+mesh). ``mode1_reuse=True`` enables the beyond-paper optimization
+Y_k V = Q_k^T (X_k V) (cached from step 1). See docs/ARCHITECTURE.md
+(stages 3-5) for the full data flow and sharding story.
 """
 from __future__ import annotations
 

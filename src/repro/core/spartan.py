@@ -3,8 +3,11 @@
 All three modes operate directly on the frontal slices Y_k (never forming the
 R x J x K intermediate tensor), are batched over subjects inside a bucket, and
 exploit column sparsity via the CC gather. Partial sums over subjects are plain
-adds — under pjit with subjects sharded over ("pod","data") they lower to
-all-reduces, which is the paper's "sum partial results in parallel".
+adds — under pjit with subjects sharded over the mesh (the "subjects" rule in
+repro.dist.sharding) they lower to all-reduces, which is the paper's "sum
+partial results in parallel". The :func:`repro.dist.sharding.shard` constraints
+below pin the per-bucket intermediates to that layout; outside a mesh they are
+no-ops. See docs/ARCHITECTURE.md for the end-to-end data flow.
 
 Shapes per bucket (Kb subjects, I rows padded, C kept-cols padded, rank R):
   Yc  [Kb, R, C]   compressed slices  Y_k = Q_k^T X_k
@@ -19,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.irregular import Bucket, Bucketed
+from repro.dist.sharding import shard
 
 __all__ = [
     "mode1_bucket",
@@ -31,7 +35,12 @@ __all__ = [
 ]
 
 
-def _f(x):  # promote to at least f32 for accumulation
+def _f(x):
+    """Promote to at least f32 for accumulation: bf16/f16 slice values feed
+    subject-axis reductions, which lose mass in half precision. f32/f64 pass
+    through unchanged (the f64 algebra tests must stay exact)."""
+    if jnp.issubdtype(x.dtype, jnp.floating) and jnp.finfo(x.dtype).bits < 32:
+        return x.astype(jnp.float32)
     return x
 
 
@@ -51,8 +60,9 @@ def mode1_bucket(
     (mode1_reuse optimization: Y_k V = Q_k^T (X_k V) cached from the Procrustes
     step), the gather+matmul is skipped entirely."""
     if YkV is None:
-        YkV = jnp.einsum("krc,kcl->krl", Yc, Vg)  # [Kb, R, R]
-    scaled = YkV * Wb[:, None, :]                 # row-wise Hadamard with W(k,:)
+        YkV = jnp.einsum("krc,kcl->krl", _f(Yc), _f(Vg))  # [Kb, R, R]
+    scaled = _f(YkV) * _f(Wb)[:, None, :]         # row-wise Hadamard with W(k,:)
+    scaled = shard(scaled, ("subjects", None, None))
     return jnp.einsum("krl,k->rl", scaled, subject_mask)
 
 
@@ -77,9 +87,10 @@ def mode2_bucket_compact(
     per subject over its kept columns only, then Hadamard with W(k,:).
     The scatter to M2 in R^{J x R} is a separate, memory-bound stage.
     """
-    A = jnp.einsum("krc,rl->kcl", Yc, H)                       # (Y_k(:,j)^T H)
-    A = A * Wb[:, None, :]                                     # * W(k,:)
-    return A * (col_mask * subject_mask[:, None])[..., None]
+    A = jnp.einsum("krc,rl->kcl", _f(Yc), H)                   # (Y_k(:,j)^T H)
+    A = A * _f(Wb)[:, None, :]                                 # * W(k,:)
+    A = A * (col_mask * subject_mask[:, None])[..., None]
+    return shard(A, ("subjects", None, None))
 
 
 def mode2_scatter(A: jax.Array, cols: jax.Array, J: int) -> jax.Array:
@@ -115,9 +126,9 @@ def mode3_bucket(
 ) -> jax.Array:
     """Per-subject rows of M3 for one bucket: [Kb, R]."""
     if YkV is None:
-        YkV = jnp.einsum("krc,kcl->krl", Yc, Vg)
-    rows = jnp.einsum("rl,krl->kl", H, YkV)       # column-wise inner products
-    return rows * subject_mask[:, None]
+        YkV = jnp.einsum("krc,kcl->krl", _f(Yc), _f(Vg))
+    rows = jnp.einsum("rl,krl->kl", H, _f(YkV))   # column-wise inner products
+    return shard(rows * subject_mask[:, None], ("subjects", None))
 
 
 def mttkrp_mode3(

@@ -1,0 +1,59 @@
+"""repro.dist — the distribution subsystem (sharding rules + fault tolerance).
+
+Two modules:
+
+* :mod:`repro.dist.sharding` — logical-axis sharding rules (``LM_RULES`` /
+  ``SP_RULES``), the ``axis_rules`` context stack, the :func:`shard`
+  constraint helper used throughout :mod:`repro.models`, path-based parameter
+  sharding (:func:`param_shardings`), and the scan-unrolling switch used by
+  the dry-run's roofline probes.
+* :mod:`repro.dist.fault` — fault injection, transient-fault retries, and a
+  straggler watchdog for resilient long ALS / training runs.
+
+The SPARTan story (see ``docs/ARCHITECTURE.md``): subjects shard subject-wide
+over EVERY mesh axis (the decomposition has no tensor-parallel dimension, so
+"model" would otherwise idle), every per-bucket MTTKRP partial result is a
+plain add over the subject axis, and under ``pjit`` those adds lower to
+all-reduces — the paper's "sum partial results in parallel".
+"""
+from repro.dist.sharding import (
+    barrier,
+    LM_RULES,
+    SP_RULES,
+    axis_rules,
+    current_mesh,
+    current_rules,
+    enforce_divisible,
+    logical_spec,
+    param_shardings,
+    param_spec,
+    shard,
+    unroll_active,
+    unroll_loops,
+)
+from repro.dist.fault import (
+    FaultInjector,
+    StepWatchdog,
+    TransientFault,
+    run_with_retries,
+)
+
+__all__ = [
+    "LM_RULES",
+    "SP_RULES",
+    "axis_rules",
+    "current_mesh",
+    "current_rules",
+    "enforce_divisible",
+    "logical_spec",
+    "param_shardings",
+    "param_spec",
+    "barrier",
+    "shard",
+    "unroll_active",
+    "unroll_loops",
+    "FaultInjector",
+    "StepWatchdog",
+    "TransientFault",
+    "run_with_retries",
+]

@@ -1,0 +1,89 @@
+"""Fault tolerance for long-running ALS / training loops.
+
+Three pieces, all host-side (nothing here enters jitted code):
+
+* :class:`FaultInjector` — deterministic transient-fault injection for
+  exercising the recovery paths in tests and the ``--fail-at`` flag of
+  ``launch/train.py``.
+* :func:`run_with_retries` — retry a step function on
+  :class:`TransientFault`; the caller escalates to checkpoint-restore when
+  retries are exhausted (see ``launch/train.py``).
+* :class:`StepWatchdog` — flags straggler steps whose wall time exceeds a
+  multiple of the running median (slow host, contended interconnect, ...).
+"""
+from __future__ import annotations
+
+import statistics
+from typing import Callable, Iterable, List, Optional
+
+__all__ = ["TransientFault", "FaultInjector", "StepWatchdog", "run_with_retries"]
+
+
+class TransientFault(RuntimeError):
+    """A failure expected to succeed on retry (preempted host, flaky link)."""
+
+
+class FaultInjector:
+    """Raise :class:`TransientFault` on each listed step's first `times`
+    attempts.
+
+    ``times=1`` (default) models a transient blip: the in-place retry
+    succeeds. ``times > max_retries`` exhausts :func:`run_with_retries`,
+    forcing callers through the checkpoint-restore + rewind path — and the
+    fault then clears, so the re-run after restore proceeds (a fault that
+    never clears would just loop restore forever, which no FT scheme fixes).
+    """
+
+    def __init__(self, fail_steps: Iterable[int] = (), *, times: int = 1):
+        self.fail_steps = frozenset(fail_steps)
+        self.times = times
+        self._fired: dict = {}
+
+    def check(self, step: int) -> None:
+        if step in self.fail_steps and self._fired.get(step, 0) < self.times:
+            self._fired[step] = self._fired.get(step, 0) + 1
+            raise TransientFault(f"injected fault at step {step}")
+
+
+def run_with_retries(fn: Callable, *args, max_retries: int = 3,
+                     on_retry: Optional[Callable] = None):
+    """Call ``fn(*args)``, retrying up to `max_retries` times on
+    :class:`TransientFault`. `on_retry(attempt, exc)` runs before each retry;
+    the last fault re-raises once retries are exhausted."""
+    for attempt in range(max_retries + 1):
+        try:
+            return fn(*args)
+        except TransientFault as e:
+            if attempt >= max_retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+
+
+class StepWatchdog:
+    """Flag steps slower than ``factor`` x the running median step time.
+
+    Flagged durations are excluded from the history so one straggler does not
+    drag the baseline up; ``min_history`` observations are required before
+    anything is flagged (cold-start compiles are never stragglers).
+    """
+
+    def __init__(self, factor: float = 3.0, *, min_history: int = 3,
+                 window: int = 50):
+        self.factor = factor
+        self.min_history = min_history
+        self.window = window
+        self._times: List[float] = []
+        self.flagged: List[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Record one step duration; returns True if `step` is a straggler."""
+        hist = self._times[-self.window:]
+        slow = (len(hist) >= self.min_history
+                and dt > self.factor * statistics.median(hist))
+        if slow:
+            self.flagged.append(step)
+        else:
+            self._times.append(dt)
+            del self._times[:-self.window]   # bound history for long runs
+        return slow

@@ -2,6 +2,11 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device state
 (the dry-run must set XLA_FLAGS before any jax initialization).
+
+Axis names ("pod", "data", "model") are the PHYSICAL side of the logical
+axis-rule tables in :mod:`repro.dist.sharding` — install a mesh with
+``axis_rules(LM_RULES, mesh)`` and the models' logical `shard` annotations
+resolve onto it (see docs/ARCHITECTURE.md, stage 5).
 """
 from __future__ import annotations
 

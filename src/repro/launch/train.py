@@ -36,6 +36,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--resume", default="", choices=["", "auto"])
     ap.add_argument("--fail-at", type=int, nargs="*", default=[],
                     help="inject transient faults at these steps (FT test)")
+    ap.add_argument("--fail-persistent", action="store_true",
+                    help="make injected faults persist past retries, forcing "
+                         "the checkpoint-restore + rewind path")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
@@ -57,7 +60,8 @@ def main(argv=None) -> dict:
         print(f"[train] resumed from step {start}")
 
     step_fn = jax.jit(bundle.train_step)
-    injector = FaultInjector(fail_steps=tuple(args.fail_at))
+    injector = FaultInjector(fail_steps=tuple(args.fail_at),
+                             times=4 if args.fail_persistent else 1)
     watchdog = StepWatchdog()
     losses = []
 
@@ -72,17 +76,22 @@ def main(argv=None) -> dict:
                 jax.random.PRNGKey(step), (args.batch, cfg.n_prefix_embeds, cfg.d_model))
         return step_fn(params, opt, batch, step)
 
-    for step in range(start, args.steps):
+    step = start
+    while step < args.steps:
         t0 = time.perf_counter()
         try:
             params, opt, metrics = run_with_retries(
                 one_step, params, opt, step,
                 on_retry=lambda a, e: print(f"[fault] step {step}: {e}; retry {a + 1}"))
         except TransientFault:
-            # persistent failure path: restore newest checkpoint and continue
+            # persistent failure path: restore newest checkpoint and REWIND —
+            # the steps between the checkpoint and the fault re-run against
+            # the restored state (a for-loop would silently skip them).
             if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
                 (params, opt), step0, extra = ckpt.restore(args.ckpt_dir, (params, opt))
                 stream.restore(extra["data"])
+                del losses[max(step0 - start, 0):]
+                step = step0
                 print(f"[fault] restored from checkpoint at step {step0}")
                 continue
             raise
@@ -98,8 +107,12 @@ def main(argv=None) -> dict:
             path = ckpt.save(args.ckpt_dir, step + 1, (params, opt),
                              extra={"data": stream.state()})
             print(f"[ckpt] wrote {path}")
+        step += 1
 
-    print(f"[train] done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    if losses:
+        print(f"[train] done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    else:
+        print(f"[train] done: nothing to do (resumed at step {start} of {args.steps})")
     return {"first_loss": losses[0] if losses else None,
             "last_loss": losses[-1] if losses else None,
             "flagged_stragglers": watchdog.flagged}

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.dist.sharding import shard
+from repro.dist.sharding import barrier, shard
 from repro.models.common import dense_init, rmsnorm
 from repro.models.attention import attn_block, init_attn
 from repro.models.mlp import init_mlp, mlp_block
@@ -131,7 +131,7 @@ def apply_block(
             # barrier: keep the bf16 cast of h2 on THIS side of the dispatch
             # gathers (XLA otherwise hoists the f32->bf16 convert past the
             # all-gather, doubling dispatch bytes).
-            y, aux = moe_block(p["moe"], jax.lax.optimization_barrier(h2), cfg)
+            y, aux = moe_block(p["moe"], barrier(h2), cfg)
         else:
             y = mlp_block(p["mlp"], h2, cfg)
         x = x + y

@@ -1,0 +1,47 @@
+"""`hypothesis` when installed; otherwise a deterministic seeded fallback.
+
+The container the tier-1 suite runs in does not ship `hypothesis`, and
+installing packages is off-limits. The property tests only use
+``@settings(max_examples=N, deadline=None)`` + ``@given(x=st.integers(a, b))``,
+so the fallback replays each property on `max_examples` draws from a fixed
+PRNG — weaker than real hypothesis (no shrinking, no example database) but
+the same assertions on the same kind of input distribution.
+
+Usage in test modules: ``from _hypothesis_compat import given, settings, st``.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import random
+
+    class _Integers:
+        def __init__(self, min_value, max_value):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def draw(self, rng):
+            return rng.randint(self.min_value, self.max_value)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+    def settings(*, max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps: pytest must NOT see the
+            # property's parameters, or it would treat them as fixtures)
+            def wrapper():
+                rng = random.Random(1234)
+                for _ in range(getattr(wrapper, "_max_examples", 20)):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -3,7 +3,7 @@ format X_k V must equal the CC einsum path on every bucket."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import bucketize, to_block_bucket
 from repro.sparse import random_irregular

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sparse import random_irregular, plan_buckets, from_dense_slices
 from repro.core import bucketize, to_block_bucket, LANE

@@ -3,7 +3,7 @@ Tensor-Toolbox-style reference), plus hypothesis property tests."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sparse import random_irregular
 from repro.core import bucketize
