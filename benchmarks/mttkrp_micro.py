@@ -1,15 +1,22 @@
 """Kernel-level micro-benchmark: per-mode SPARTan MTTKRP vs materialized-KRP
-baseline on identical inputs (the paper's core computational claim)."""
+baseline on identical inputs (the paper's core computational claim).
+
+``--backends jnp,pallas`` times every requested MTTKRP backend side by side
+in one invocation (rows ``mttkrp/<mode>/<backend>``), each against the shared
+dense baseline; ``--json PATH`` additionally writes the timings as a JSON
+artifact (the CI perf trajectory, BENCH_mttkrp.json).
+"""
 from __future__ import annotations
 
 import argparse
+import json
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import bucketize
-from repro.core import spartan
+from repro.core.backend import get_backend
 from repro.core.baseline import baseline_mode1, baseline_mode2, baseline_mode3, dense_y
 from repro.sparse import random_irregular
 from benchmarks.common import emit, time_call
@@ -21,6 +28,10 @@ def main(argv=None):
     ap.add_argument("--cols", type=int, default=2000)
     ap.add_argument("--rank", type=int, default=40)
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--backends", default="jnp,pallas",
+                    help="comma list of MTTKRP backends to time side by side")
+    ap.add_argument("--json", default="",
+                    help="write per-mode/backend timings to this JSON file")
     args = ap.parse_args(argv)
 
     # geometry mirrors the paper's sparse regime: few active columns (c_k)
@@ -38,41 +49,46 @@ def main(argv=None):
 
     # factors are traced ARGUMENTS (otherwise XLA constant-folds the whole
     # computation and the timing is meaningless); bucket data is closed over
-    # identically for both methods.
-    @jax.jit
-    def spartan_m1(V, W):
-        return sum(spartan.mode1_bucket(Yc, b.gather_v(V),
-                                        jnp.take(W, b.subject_ids, 0),
-                                        b.subject_mask)
-                   for b, Yc in zip(bt.buckets, Ycs))
-
-    @jax.jit
-    def spartan_m2(H, W):
-        return spartan.mttkrp_mode2(
-            [(Yc, jnp.take(W, b.subject_ids, 0), b.cols, b.col_mask,
-              b.subject_mask) for b, Yc in zip(bt.buckets, Ycs)], H, J)
-
-    @jax.jit
-    def spartan_m3(H, V):
-        return spartan.mttkrp_mode3(
-            [(Yc, b.gather_v(V), b.subject_ids, b.subject_mask)
-             for b, Yc in zip(bt.buckets, Ycs)], H, K)
-
+    # identically for every method.
     Y = jax.jit(lambda: dense_y(bt.buckets, Ycs, J, K))()
-    base_m1 = jax.jit(lambda V, W: baseline_mode1(Y, V, W))
-    base_m2 = jax.jit(lambda H, W: baseline_mode2(Y, H, W))
-    base_m3 = jax.jit(lambda H, V: baseline_mode3(Y, H, V))
+    base_fns = {
+        "mode1": (jax.jit(lambda V, W: baseline_mode1(Y, V, W)), (V, W)),
+        "mode2": (jax.jit(lambda H, W: baseline_mode2(Y, H, W)), (H, W)),
+        "mode3": (jax.jit(lambda H, V: baseline_mode3(Y, H, V)), (H, V)),
+    }
+    base = {}
+    for name, (fn, fargs) in base_fns.items():
+        base[name] = time_call(fn, *fargs, iters=args.iters)
 
-    for name, sp_fn, bl_fn, fargs in (
-            ("mode1", spartan_m1, base_m1, (V, W)),
-            ("mode2", spartan_m2, base_m2, (H, W)),
-            ("mode3", spartan_m3, base_m3, (H, V))):
-        t_sp, a = time_call(sp_fn, *fargs, iters=args.iters)
-        t_bl, b = time_call(bl_fn, *fargs, iters=args.iters)
-        err = float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-30))
-        emit(f"mttkrp/{name}/spartan", t_sp,
-             f"speedup={t_bl/t_sp:.2f}x relerr={err:.2e}")
+    results = {"config": {"subjects": K, "cols": J, "rank": R,
+                          "platform": jax.default_backend()}}
+    for bname in [s.strip() for s in args.backends.split(",") if s.strip()]:
+        be = get_backend(bname)
+        sp_fns = {
+            "mode1": (jax.jit(lambda V, W: be.mttkrp_mode1(bt.buckets, Ycs, V, W)),
+                      (V, W)),
+            "mode2": (jax.jit(lambda H, W: be.mttkrp_mode2(bt.buckets, Ycs, H, W, J)),
+                      (H, W)),
+            "mode3": (jax.jit(lambda H, V: be.mttkrp_mode3(bt.buckets, Ycs, V, H, K)),
+                      (H, V)),
+        }
+        for name, (fn, fargs) in sp_fns.items():
+            t_sp, a = time_call(fn, *fargs, iters=args.iters)
+            t_bl, b = base[name]
+            err = float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-30))
+            emit(f"mttkrp/{name}/{bname}", t_sp,
+                 f"speedup={t_bl/t_sp:.2f}x relerr={err:.2e}")
+            results[f"{name}/{bname}"] = {
+                "us_per_call": t_sp * 1e6, "speedup_vs_baseline": t_bl / t_sp,
+                "relerr": err}
+    for name, (t_bl, _) in base.items():
         emit(f"mttkrp/{name}/baseline", t_bl, "")
+        results[f"{name}/baseline"] = {"us_per_call": t_bl * 1e6}
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
 
 
 if __name__ == "__main__":

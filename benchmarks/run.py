@@ -16,13 +16,22 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger problem sizes")
     ap.add_argument("--only", default="", help="comma list: table1,fig5,fig6,fig7,micro")
+    ap.add_argument("--backends", default="jnp,pallas",
+                    help="comma list of MTTKRP backends for the micro rows "
+                         "(jnp,pallas side by side by default)")
+    ap.add_argument("--bench-json", default="",
+                    help="write the micro per-mode/backend timings to this "
+                         "JSON file (CI artifact)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
     if only is None or "micro" in only:
-        mttkrp_micro.main(["--subjects", "4000" if args.full else "1000",
-                           "--iters", "3"])
+        micro_args = ["--subjects", "4000" if args.full else "1000",
+                      "--iters", "3", "--backends", args.backends]
+        if args.bench_json:
+            micro_args += ["--json", args.bench_json]
+        mttkrp_micro.main(micro_args)
     if only is None or "table1" in only:
         table1_synthetic.main(["--scale", "0.004" if args.full else "0.001"])
     if only is None or "fig5" in only:

@@ -1,5 +1,6 @@
 """Paper core: PARAFAC2 + SPARTan MTTKRP on bucketed compressed-column data."""
 from repro.core.irregular import Bucket, Bucketed, BlockBucket, bucketize, to_block_bucket, LANE
+from repro.core.backend import MttkrpBackend, get_backend
 from repro.core.parafac2 import (
     Parafac2Options,
     Parafac2State,
@@ -16,6 +17,8 @@ __all__ = [
     "bucketize",
     "to_block_bucket",
     "LANE",
+    "MttkrpBackend",
+    "get_backend",
     "Parafac2Options",
     "Parafac2State",
     "als_step",

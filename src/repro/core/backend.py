@@ -1,0 +1,268 @@
+"""Pluggable MTTKRP compute backends for the SPARTan ALS hot loop.
+
+The ALS algebra (``core/parafac2.py``) never touches a kernel directly: it
+asks an :class:`MttkrpBackend` for the three per-bucket SPARTan contractions
+and the shared stages. Three implementations:
+
+``jnp``
+    The pure-jnp math in :mod:`repro.core.spartan` — the reference path, exact
+    in f64, used by the algebra tests.
+``pallas``
+    Dispatches through :mod:`repro.kernels.ops` — Mosaic kernels on TPU,
+    ``interpret=True`` emulation elsewhere (a correctness tool, not a fast
+    path off-TPU). Outputs are f32 accumulations; f64 inputs are demoted.
+``auto``
+    Per-call dispatch: ``pallas`` on TPU for kernel-friendly bucket geometry
+    (f32/bf16 with R a multiple of 8 and C a multiple of 128 — the MXU
+    sublane/lane quanta the ``col_align=128`` bucketizer default produces),
+    ``jnp`` for everything else, including all CPU/GPU runs.
+
+The backend layer is also the single place the ``"subjects"`` logical-axis
+sharding constraints (:func:`repro.dist.sharding.shard`) are applied: every
+Kb-leading input and output passes through :meth:`MttkrpBackend.shard_subjects`
+uniformly, instead of ad-hoc ``shard`` calls scattered through the math. The
+memory-bound :meth:`MttkrpBackend.mode2_scatter` (XLA scatter-add into
+J-space) is a shared stage every backend reuses; :meth:`MttkrpBackend.ykv`
+(the Y_k V product the ALS step computes once per bucket and feeds to the
+mode-1/mode-3 reuse entry points and the fit) dispatches per backend like
+the modes do.
+
+Select via ``Parafac2Options(backend=...)`` or ``--backend`` on the launchers
+and benchmarks. See docs/ARCHITECTURE.md (stage 4½).
+"""
+from __future__ import annotations
+
+import abc
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spartan
+from repro.dist.sharding import shard
+
+__all__ = [
+    "MttkrpBackend",
+    "JnpBackend",
+    "PallasBackend",
+    "AutoBackend",
+    "BACKENDS",
+    "get_backend",
+]
+
+
+class MttkrpBackend(abc.ABC):
+    """The three SPARTan MTTKRP contractions, per bucket.
+
+    Per-bucket shapes (Kb subjects, C kept-cols padded, rank R):
+      Yc [Kb, R, C] compressed slices; Vg [Kb, C, R] gathered V rows;
+      Wb [Kb, R] W rows; masks 1.0 = real, 0.0 = padding.
+    Subclasses implement ``_mode1`` / ``_mode2_compact`` / ``_mode3``; the
+    public methods add the uniform subject-axis sharding constraints.
+    """
+
+    name: str = "?"
+
+    # -- uniform sharding ---------------------------------------------------
+    @staticmethod
+    def shard_subjects(x: Optional[jax.Array]) -> Optional[jax.Array]:
+        """Constrain a Kb-leading array onto the "subjects" logical axis
+        (no-op outside a mesh)."""
+        if x is None:
+            return None
+        return shard(x, ("subjects",) + (None,) * (x.ndim - 1))
+
+    # -- shared stages ------------------------------------------------------
+    def ykv(self, Yc: jax.Array, Vg: jax.Array) -> jax.Array:
+        """Y_k V [Kb, R, R] — the product the mode-1/mode-3 reuse paths and
+        the fit computation share; the ALS step computes it once per bucket."""
+        return jnp.einsum("krc,kcl->krl", spartan._f(Yc), spartan._f(Vg))
+
+    mode2_scatter = staticmethod(spartan.mode2_scatter)
+
+    # -- per-bucket contractions --------------------------------------------
+    def mode1(self, Yc, Vg, Wb, subject_mask, *, YkV=None) -> jax.Array:
+        """Partial M1 [R, R] = sum_k (Y_k V) * W(k,:). With ``YkV`` cached
+        (mode1_reuse), Vg may be None and the gather+matmul is skipped."""
+        Yc, Vg, Wb, subject_mask, YkV = map(
+            self.shard_subjects, (Yc, Vg, Wb, subject_mask, YkV))
+        return self._mode1(Yc, Vg, Wb, subject_mask, YkV=YkV)
+
+    def mode2_compact(self, Yc, H, Wb, col_mask, subject_mask) -> jax.Array:
+        """Compact A [Kb, C, R] = (Y_k^T H) * W(k,:); masked rows are 0."""
+        Yc, Wb, col_mask, subject_mask = map(
+            self.shard_subjects, (Yc, Wb, col_mask, subject_mask))
+        return self.shard_subjects(
+            self._mode2_compact(Yc, H, Wb, col_mask, subject_mask))
+
+    def mode3(self, Yc, Vg, H, subject_mask, *, YkV=None) -> jax.Array:
+        """Per-subject M3 rows [Kb, R] = coldot(H, Y_k V)."""
+        Yc, Vg, subject_mask, YkV = map(
+            self.shard_subjects, (Yc, Vg, subject_mask, YkV))
+        return self.shard_subjects(self._mode3(Yc, Vg, H, subject_mask, YkV=YkV))
+
+    @abc.abstractmethod
+    def _mode1(self, Yc, Vg, Wb, subject_mask, *, YkV=None) -> jax.Array: ...
+
+    @abc.abstractmethod
+    def _mode2_compact(self, Yc, H, Wb, col_mask, subject_mask) -> jax.Array: ...
+
+    @abc.abstractmethod
+    def _mode3(self, Yc, Vg, H, subject_mask, *, YkV=None) -> jax.Array: ...
+
+    # -- whole-tensor helpers (the one callsite shape per mode) -------------
+    def mttkrp_mode1(self, buckets: Sequence, Ycs: Sequence[jax.Array],
+                     V: jax.Array, W: jax.Array) -> jax.Array:
+        """M1 [R, R] over all buckets, with W global [K, R]."""
+        return sum(
+            self.mode1(Yc, b.gather_v(V), jnp.take(W, b.subject_ids, 0),
+                       b.subject_mask)
+            for b, Yc in zip(buckets, Ycs))
+
+    def mttkrp_mode2(self, buckets: Sequence, Ycs: Sequence[jax.Array],
+                     H: jax.Array, W: jax.Array, J: int) -> jax.Array:
+        """M2 [J, R]: compact compute stage per bucket + shared scatter."""
+        M2 = jnp.zeros((J, H.shape[0]), H.dtype)
+        for b, Yc in zip(buckets, Ycs):
+            A = self.mode2_compact(Yc, H, jnp.take(W, b.subject_ids, 0),
+                                   b.col_mask, b.subject_mask)
+            M2 = M2 + self.mode2_scatter(A, b.cols, J).astype(M2.dtype)
+        return M2
+
+    def mttkrp_mode3(self, buckets: Sequence, Ycs: Sequence[jax.Array],
+                     V: jax.Array, H: jax.Array, K: int) -> jax.Array:
+        """M3 [K, R]: per-subject rows scattered to global subject ids."""
+        M3 = jnp.zeros((K, H.shape[0]), H.dtype)
+        for b, Yc in zip(buckets, Ycs):
+            rows = self.mode3(Yc, b.gather_v(V), H, b.subject_mask)
+            M3 = M3.at[b.subject_ids].add(rows.astype(M3.dtype))
+        return M3
+
+
+class JnpBackend(MttkrpBackend):
+    """The :mod:`repro.core.spartan` math — today's numerics, exactly."""
+
+    name = "jnp"
+
+    def _mode1(self, Yc, Vg, Wb, subject_mask, *, YkV=None):
+        return spartan.mode1_bucket(Yc, Vg, Wb, subject_mask, YkV=YkV)
+
+    def _mode2_compact(self, Yc, H, Wb, col_mask, subject_mask):
+        return spartan.mode2_bucket_compact(Yc, H, Wb, col_mask, subject_mask)
+
+    def _mode3(self, Yc, Vg, H, subject_mask, *, YkV=None):
+        return spartan.mode3_bucket(Yc, Vg, H, subject_mask, YkV=YkV)
+
+
+class PallasBackend(MttkrpBackend):
+    """Routes through the Pallas kernels (:mod:`repro.kernels.ops`).
+
+    Mosaic on TPU; interpret mode elsewhere. Kernel accumulators are f32, so
+    outputs come back f32 regardless of input dtype; f64 inputs are demoted
+    to f32 on the way in (use ``jnp`` for f64 algebra).
+    """
+
+    name = "pallas"
+
+    @staticmethod
+    def _k32(x: Optional[jax.Array]) -> Optional[jax.Array]:
+        if x is not None and x.dtype == jnp.float64:
+            return x.astype(jnp.float32)
+        return x
+
+    def ykv(self, Yc, Vg):
+        from repro.kernels import ops
+        return ops.ykv(self._k32(Yc), self._k32(Vg))
+
+    def _mode1(self, Yc, Vg, Wb, subject_mask, *, YkV=None):
+        from repro.kernels import ops
+        return ops.mttkrp_mode1(
+            self._k32(Yc), self._k32(Vg), self._k32(Wb),
+            subject_mask=self._k32(subject_mask), YkV=self._k32(YkV))
+
+    def _mode2_compact(self, Yc, H, Wb, col_mask, subject_mask):
+        from repro.kernels import ops
+        return ops.mttkrp_mode2_compact(
+            self._k32(Yc), self._k32(H), self._k32(Wb),
+            col_mask=self._k32(col_mask), subject_mask=self._k32(subject_mask))
+
+    def _mode3(self, Yc, Vg, H, subject_mask, *, YkV=None):
+        from repro.kernels import ops
+        return ops.mttkrp_mode3(
+            self._k32(Yc), self._k32(Vg), self._k32(H),
+            subject_mask=self._k32(subject_mask), YkV=self._k32(YkV))
+
+
+class AutoBackend(MttkrpBackend):
+    """Per-platform, per-bucket-geometry dispatch between jnp and pallas.
+
+    The decision is made at trace time from static shapes/dtypes, so under
+    jit each bucket compiles against exactly one implementation. Buckets the
+    kernels handle poorly (odd R/C, f64, non-TPU platforms) fall back to jnp.
+    """
+
+    name = "auto"
+
+    def __init__(self):
+        self._jnp = JnpBackend()
+        self._pallas = PallasBackend()
+
+    @staticmethod
+    def _platform_ok(probe: Optional[jax.Array]) -> bool:
+        return (probe is not None and jax.default_backend() == "tpu"
+                and probe.dtype != jnp.float64)
+
+    @classmethod
+    def _kernel_friendly(cls, probe: Optional[jax.Array]) -> bool:
+        """Full C-contraction kernels: want R on the sublane quantum and the
+        kept-column count C on the lane quantum (col_align=128 default)."""
+        if not cls._platform_ok(probe):
+            return False
+        R, C = probe.shape[-2], probe.shape[-1]
+        return R % 8 == 0 and C % 128 == 0
+
+    @classmethod
+    def _reuse_friendly(cls, YkV: Optional[jax.Array]) -> bool:
+        """YkV-cached kernels only touch [Kb,R,R] tiles (VPU reductions), so
+        only the sublane quantum matters — Mosaic lane-pads the small R."""
+        if not cls._platform_ok(YkV):
+            return False
+        return YkV.shape[-1] % 8 == 0
+
+    def _pick(self, probe, *, reuse: bool = False) -> MttkrpBackend:
+        ok = self._reuse_friendly(probe) if reuse else self._kernel_friendly(probe)
+        return self._pallas if ok else self._jnp
+
+    def ykv(self, Yc, Vg):
+        return self._pick(Yc).ykv(Yc, Vg)
+
+    def _mode1(self, Yc, Vg, Wb, subject_mask, *, YkV=None):
+        if YkV is not None:
+            return self._pick(YkV, reuse=True)._mode1(
+                Yc, Vg, Wb, subject_mask, YkV=YkV)
+        return self._pick(Yc)._mode1(Yc, Vg, Wb, subject_mask, YkV=None)
+
+    def _mode2_compact(self, Yc, H, Wb, col_mask, subject_mask):
+        return self._pick(Yc)._mode2_compact(Yc, H, Wb, col_mask, subject_mask)
+
+    def _mode3(self, Yc, Vg, H, subject_mask, *, YkV=None):
+        if YkV is not None:
+            return self._pick(YkV, reuse=True)._mode3(
+                Yc, Vg, H, subject_mask, YkV=YkV)
+        return self._pick(Yc)._mode3(Yc, Vg, H, subject_mask, YkV=None)
+
+
+BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend(), "auto": AutoBackend()}
+
+
+def get_backend(name) -> MttkrpBackend:
+    """Resolve a backend by name ("jnp" | "pallas" | "auto") or pass an
+    :class:`MttkrpBackend` instance through unchanged."""
+    if isinstance(name, MttkrpBackend):
+        return name
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown MTTKRP backend {name!r}; choose from {sorted(BACKENDS)}"
+        ) from None

@@ -160,7 +160,7 @@ def bucketize(
     *,
     max_buckets: int = 4,
     row_align: int = 8,
-    col_align: int = 8,
+    col_align: int = 128,
     subject_align: int = 1,
     dtype=jnp.float32,
     plan: Optional[BucketPlan] = None,

@@ -14,7 +14,10 @@ Everything inside :func:`als_step` is jit/pjit-compatible; subjects shard over
 the leading bucket axis (the "subjects" rule in :mod:`repro.dist.sharding`;
 ``launch/dryrun.py::run_parafac2_cell`` lowers this step on a production
 mesh). ``mode1_reuse=True`` enables the beyond-paper optimization
-Y_k V = Q_k^T (X_k V) (cached from step 1). See docs/ARCHITECTURE.md
+Y_k V = Q_k^T (X_k V) (cached from step 1). The three MTTKRPs dispatch
+through a pluggable compute backend (``opts.backend``: "jnp" | "pallas" |
+"auto" — see :mod:`repro.core.backend`), so the same ALS algebra runs the
+pure-jnp SPARTan math or the Pallas TPU kernels. See docs/ARCHITECTURE.md
 (stages 3-5) for the full data flow and sharding story.
 """
 from __future__ import annotations
@@ -27,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.irregular import Bucket, Bucketed
-from repro.core import spartan
+from repro.core.backend import MttkrpBackend, get_backend
 from repro.core.cp import cp_gram, factor_update, normalize_columns
 from repro.core.procrustes import solve_q
 
@@ -49,6 +52,11 @@ class Parafac2Options:
     mode1_reuse: bool = True            # beyond-paper: reuse X_k V from step 1
     nnls_sweeps: int = 5
     dtype: Any = jnp.float32
+    # MTTKRP compute backend: "jnp" (pure-jnp spartan math, exact reference),
+    # "pallas" (TPU kernels; interpret-mode emulation off-TPU), or "auto"
+    # (pallas on TPU for kernel-friendly bucket geometry, jnp otherwise).
+    # See repro.core.backend.
+    backend: str = "auto"
     # W layout: "global" [K,R] (simple, interpretable) or "bucketed" (tuple of
     # per-bucket [Kb,R] rows aligned with the data shards — no W gathers under
     # pjit; the layout production runs use, §Perf 'bucketed W').
@@ -98,17 +106,18 @@ def w_global(data: Bucketed, W) -> jnp.ndarray:
 
 def _procrustes_project(
     b: Bucket, H: jax.Array, V: jax.Array, W: jax.Array, opts: Parafac2Options,
-    i: int = 0,
+    i: int = 0, be: Optional[MttkrpBackend] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Steps 1+2 for one bucket -> (Yc, XkV, Q)."""
+    be = get_backend(opts.backend) if be is None else be
     Vg = b.gather_v(V)                                   # [Kb, C, R]
-    XkV = b.xk_times_v(V, Vg)                            # [Kb, I, R]
+    XkV = be.shard_subjects(b.xk_times_v(V, Vg))         # [Kb, I, R]
     Wb = _w_rows(W, b, i)                                # [Kb, R]
     # B_k = X_k V S_k H^T  == (XkV * w_k) @ H^T
     B = jnp.einsum("kir,lr->kil", XkV * Wb[:, None, :], H)
     Q = solve_q(B, opts.procrustes)                      # [Kb, I, R]
-    Q = Q * b.subject_mask[:, None, None]
-    Yc = b.project(Q)                                    # [Kb, R, C]
+    Q = be.shard_subjects(Q * b.subject_mask[:, None, None])
+    Yc = be.shard_subjects(b.project(Q))                 # [Kb, R, C]
     return Yc, XkV, Q
 
 
@@ -120,6 +129,7 @@ def als_step(
     """One full PARAFAC2-ALS iteration (jit-compatible)."""
     H, V, W = state.H, state.V, state.W
     R, J, K = opts.rank, data.n_cols, data.n_subjects
+    be = get_backend(opts.backend)
 
     bucketed = isinstance(W, tuple)
 
@@ -129,7 +139,7 @@ def als_step(
         return W * norms[None, :]
 
     # ---- 1+2: Procrustes + projection, per bucket --------------------------
-    per_bucket = [_procrustes_project(b, H, V, W, opts, i)
+    per_bucket = [_procrustes_project(b, H, V, W, opts, i, be)
                   for i, b in enumerate(data.buckets)]
 
     # ---- 3a: H update (mode-1 MTTKRP) --------------------------------------
@@ -139,10 +149,9 @@ def als_step(
         if opts.mode1_reuse:
             # Y_k V = Q_k^T (X_k V): skip the gather+matmul on sparse data.
             YkV = jnp.einsum("kir,kil->krl", Q, XkV)
-            M1 = M1 + spartan.mode1_bucket(Yc, None, Wb, b.subject_mask, YkV=YkV)
+            M1 = M1 + be.mode1(Yc, None, Wb, b.subject_mask, YkV=YkV)
         else:
-            Vg = b.gather_v(V)
-            M1 = M1 + spartan.mode1_bucket(Yc, Vg, Wb, b.subject_mask)
+            M1 = M1 + be.mode1(Yc, b.gather_v(V), Wb, b.subject_mask)
     H_new = factor_update(M1, _w_gram(W) * (V.T @ V), H, nonneg=False)
     H_new, h_norms = normalize_columns(H_new)
     W = scale_w(W, h_norms)         # absorb scale (model-invariant)
@@ -151,8 +160,8 @@ def als_step(
     M2 = jnp.zeros((J, R), opts.dtype)
     for i, (b, (Yc, _, _)) in enumerate(zip(data.buckets, per_bucket)):
         Wb = _w_rows(W, b, i)
-        A = spartan.mode2_bucket_compact(Yc, H_new, Wb, b.col_mask, b.subject_mask)
-        M2 = M2 + spartan.mode2_scatter(A, b.cols, J)
+        A = be.mode2_compact(Yc, H_new, Wb, b.col_mask, b.subject_mask)
+        M2 = M2 + be.mode2_scatter(A, b.cols, J).astype(M2.dtype)
     V_new = factor_update(M2, _w_gram(W) * (H_new.T @ H_new), V, nonneg=opts.nonneg,
                           nnls_sweeps=opts.nnls_sweeps)
     V_new, v_norms = normalize_columns(V_new)
@@ -162,21 +171,22 @@ def als_step(
     VtV = V_new.T @ V_new
     gram3 = VtV * (H_new.T @ H_new)
     rows_per_bucket = []
+    Gs = []   # G_k = Y_k V_new per bucket, shared with the fit computation
     for b, (Yc, _, _) in zip(data.buckets, per_bucket):
-        Vg_new = b.gather_v(V_new)
-        YkV_new = jnp.einsum("krc,kcl->krl", Yc, Vg_new)
+        G = be.ykv(Yc, b.gather_v(V_new))
+        Gs.append(G)
         rows_per_bucket.append(
-            spartan.mode3_bucket(Yc, None, H_new, b.subject_mask, YkV=YkV_new))
+            be.mode3(Yc, None, H_new, b.subject_mask, YkV=G))
     if bucketed:
         # per-bucket W rows update in place — no K-wide scatter, no gathers
         W_new = tuple(
-            factor_update(rows, gram3, wb, nonneg=opts.nonneg,
+            factor_update(rows.astype(wb.dtype), gram3, wb, nonneg=opts.nonneg,
                           nnls_sweeps=opts.nnls_sweeps) * b.subject_mask[:, None]
             for rows, wb, b in zip(rows_per_bucket, W, data.buckets))
     else:
         M3 = jnp.zeros((K, R), opts.dtype)
         for b, rows in zip(data.buckets, rows_per_bucket):
-            M3 = M3.at[b.subject_ids].add(rows)
+            M3 = M3.at[b.subject_ids].add(rows.astype(M3.dtype))
         W_new = factor_update(M3, gram3, W, nonneg=opts.nonneg,
                               nnls_sweeps=opts.nnls_sweeps)
 
@@ -186,8 +196,7 @@ def als_step(
     Phi = H_new.T @ H_new
     resid = jnp.asarray(data.norm_sq, opts.dtype)
     for i, (b, (Yc, _, _)) in enumerate(zip(data.buckets, per_bucket)):
-        Vg_new = b.gather_v(V_new)
-        G = jnp.einsum("krc,kcl->krl", Yc, Vg_new)             # [Kb, R, R]
+        G = Gs[i]                                              # [Kb, R, R]
         Wb = _w_rows(W_new, b, i)                              # [Kb, R]
         cross = jnp.einsum("rl,krl,kl,k->", H_new, G, Wb, b.subject_mask)
         model = jnp.einsum("rl,rl,kr,kl,k->", Phi, VtV, Wb, Wb, b.subject_mask)

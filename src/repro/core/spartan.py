@@ -2,12 +2,16 @@
 
 All three modes operate directly on the frontal slices Y_k (never forming the
 R x J x K intermediate tensor), are batched over subjects inside a bucket, and
-exploit column sparsity via the CC gather. Partial sums over subjects are plain
-adds — under pjit with subjects sharded over the mesh (the "subjects" rule in
-repro.dist.sharding) they lower to all-reduces, which is the paper's "sum
-partial results in parallel". The :func:`repro.dist.sharding.shard` constraints
-below pin the per-bucket intermediates to that layout; outside a mesh they are
-no-ops. See docs/ARCHITECTURE.md for the end-to-end data flow.
+exploit column sparsity via the CC gather. Partial sums over subjects are
+plain adds — under pjit with subjects sharded over the mesh (the "subjects"
+rule in repro.dist.sharding) they lower to all-reduces, which is the paper's
+"sum partial results in parallel".
+
+This module is pure math: the functions here are the ``jnp`` implementation
+behind :class:`repro.core.backend.JnpBackend`. Backend selection, the
+whole-tensor per-mode helpers, and the uniform subject-axis sharding
+constraints all live in :mod:`repro.core.backend` — the one layer the ALS
+driver talks to. See docs/ARCHITECTURE.md for the end-to-end data flow.
 
 Shapes per bucket (Kb subjects, I rows padded, C kept-cols padded, rank R):
   Yc  [Kb, R, C]   compressed slices  Y_k = Q_k^T X_k
@@ -16,22 +20,16 @@ Shapes per bucket (Kb subjects, I rows padded, C kept-cols padded, rank R):
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-
-from repro.core.irregular import Bucket, Bucketed
-from repro.dist.sharding import shard
 
 __all__ = [
     "mode1_bucket",
     "mode2_bucket_compact",
     "mode2_scatter",
     "mode3_bucket",
-    "mttkrp_mode1",
-    "mttkrp_mode2",
-    "mttkrp_mode3",
 ]
 
 
@@ -62,12 +60,7 @@ def mode1_bucket(
     if YkV is None:
         YkV = jnp.einsum("krc,kcl->krl", _f(Yc), _f(Vg))  # [Kb, R, R]
     scaled = _f(YkV) * _f(Wb)[:, None, :]         # row-wise Hadamard with W(k,:)
-    scaled = shard(scaled, ("subjects", None, None))
     return jnp.einsum("krl,k->rl", scaled, subject_mask)
-
-
-def mttkrp_mode1(buckets_args: List[Tuple[jax.Array, jax.Array, jax.Array, jax.Array]]) -> jax.Array:
-    return sum(mode1_bucket(*a) for a in buckets_args)
 
 
 # ---------------------------------------------------------------------------
@@ -89,8 +82,7 @@ def mode2_bucket_compact(
     """
     A = jnp.einsum("krc,rl->kcl", _f(Yc), H)                   # (Y_k(:,j)^T H)
     A = A * _f(Wb)[:, None, :]                                 # * W(k,:)
-    A = A * (col_mask * subject_mask[:, None])[..., None]
-    return shard(A, ("subjects", None, None))
+    return A * (col_mask * subject_mask[:, None])[..., None]
 
 
 def mode2_scatter(A: jax.Array, cols: jax.Array, J: int) -> jax.Array:
@@ -100,16 +92,6 @@ def mode2_scatter(A: jax.Array, cols: jax.Array, J: int) -> jax.Array:
     flat_cols = cols.reshape(-1)                               # [Kb*C]
     flat_A = A.reshape(-1, R)
     return jnp.zeros((J, R), A.dtype).at[flat_cols].add(flat_A)
-
-
-def mttkrp_mode2(bucket_data: List[Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]],
-                 H: jax.Array, J: int) -> jax.Array:
-    """bucket_data entries: (Yc, Wb, cols, col_mask, subject_mask)."""
-    M2 = jnp.zeros((J, H.shape[0]), H.dtype)
-    for Yc, Wb, cols, col_mask, subject_mask in bucket_data:
-        A = mode2_bucket_compact(Yc, H, Wb, col_mask, subject_mask)
-        M2 = M2 + mode2_scatter(A, cols, J)
-    return M2
 
 
 # ---------------------------------------------------------------------------
@@ -128,18 +110,4 @@ def mode3_bucket(
     if YkV is None:
         YkV = jnp.einsum("krc,kcl->krl", _f(Yc), _f(Vg))
     rows = jnp.einsum("rl,krl->kl", H, _f(YkV))   # column-wise inner products
-    return shard(rows * subject_mask[:, None], ("subjects", None))
-
-
-def mttkrp_mode3(
-    bucket_data: List[Tuple[jax.Array, jax.Array, jax.Array, jax.Array]],
-    H: jax.Array,
-    K: int,
-) -> jax.Array:
-    """bucket_data entries: (Yc, Vg, subject_ids, subject_mask). Returns [K, R]."""
-    R = H.shape[0]
-    M3 = jnp.zeros((K, R), H.dtype)
-    for Yc, Vg, sids, smask in bucket_data:
-        rows = mode3_bucket(Yc, Vg, H, smask)
-        M3 = M3.at[sids].add(rows)   # padded subjects: mask zeroed, sid 0 harmless
-    return M3
+    return rows * subject_mask[:, None]

@@ -20,8 +20,9 @@ all-gathers at each block boundary).
 
 The ``"subjects"`` axis is the PARAFAC2 workload: SPARTan's per-subject
 partial MTTKRP results are plain adds over this axis, so constraining it onto
-the mesh makes the bucket reductions in :mod:`repro.core.spartan` lower to
-all-reduces (the paper's "sum partial results in parallel"). It maps to EVERY
+the mesh makes the bucket reductions lower to all-reduces (the paper's "sum
+partial results in parallel"); :mod:`repro.core.backend` applies the
+constraint uniformly around the MTTKRP math. It maps to EVERY
 mesh axis — the decomposition has no tensor-parallel dimension, so leaving
 ``"model"`` idle would waste its memory and compute (subject-wide sharding;
 see ``launch/dryrun.py::parafac2_shardings``).

@@ -1,0 +1,17 @@
+"""Small helpers shared by the MTTKRP kernel wrappers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["fold_subject_mask"]
+
+
+def fold_subject_mask(Wb: jax.Array, subject_mask: Optional[jax.Array]) -> jax.Array:
+    """Fold ``subject_mask`` [K] into the W rows [K, R]: every mode scales a
+    subject's whole contribution by W(k,:), so masking W masks the subject
+    exactly (the one place this identity is encoded)."""
+    if subject_mask is None:
+        return Wb
+    return Wb * subject_mask[:, None].astype(Wb.dtype)

@@ -6,6 +6,15 @@ MXU, the row-wise Hadamard with W(k,:) on the VPU, and the R x R accumulator
 resident in the output VMEM window across the whole grid (classic revisited-
 window reduction). Optionally tiles C for large kept-column counts.
 
+Two entry points:
+
+* :func:`mode1_pallas` — full gather+matmul path. ``subject_mask`` is folded
+  into W(k,:) (the Hadamard is linear in W, so masking W masks the subject's
+  whole contribution exactly).
+* :func:`mode1_reuse_pallas` — the ``mode1_reuse`` path: Y_k V ([K,R,R]) is
+  already cached from the Procrustes step (Y_k V = Q_k^T (X_k V)), so only
+  the Hadamard + subject reduction remain (pure VPU work).
+
 Alignment: best MXU utilization wants R padded to 8 (sublane) and C to 128
 (lane); the bucketizer's ``col_align=128`` produces that. Works (slower) for
 odd shapes too; interpret=True is bit-exact on CPU.
@@ -13,12 +22,15 @@ odd shapes too; interpret=True is bit-exact on CPU.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["mode1_pallas"]
+from repro.kernels.common import fold_subject_mask
+
+__all__ = ["mode1_pallas", "mode1_reuse_pallas"]
 
 
 def _kernel(yc_ref, vg_ref, wb_ref, out_ref):
@@ -38,12 +50,17 @@ def mode1_pallas(
     Yc: jax.Array,
     Vg: jax.Array,
     Wb: jax.Array,
+    subject_mask: Optional[jax.Array] = None,
     *,
     block_c: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """Yc [K,R,C] (subject-mask pre-applied), Vg [K,C,R], Wb [K,R] -> [R,R]."""
+    """Yc [K,R,C], Vg [K,C,R], Wb [K,R] -> [R,R]. ``subject_mask`` [K] (1.0 =
+    real subject) is folded into Wb so padded subjects contribute nothing."""
     K, R, C = Yc.shape
+    if K == 0:
+        return jnp.zeros((R, R), jnp.float32)
+    Wb = fold_subject_mask(Wb, subject_mask)
     bc = min(block_c, C)
     nc = pl.cdiv(C, bc)
     if C % bc:  # zero-pad partial tile (zero columns contribute nothing)
@@ -63,3 +80,41 @@ def mode1_pallas(
         out_shape=jax.ShapeDtypeStruct((R, R), jnp.float32),
         interpret=interpret,
     )(Yc, Vg, Wb)
+
+
+def _reuse_kernel(ykv_ref, wb_ref, out_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ykv = ykv_ref[0].astype(jnp.float32)
+    out_ref[...] += ykv * wb_ref[0].astype(jnp.float32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mode1_reuse_pallas(
+    YkV: jax.Array,
+    Wb: jax.Array,
+    subject_mask: Optional[jax.Array] = None,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """YkV [K,R,R] (= Y_k V, cached), Wb [K,R] -> [R,R]: Hadamard with W(k,:)
+    plus the subject-axis reduction only — the matmul was paid upstream."""
+    K, R, _ = YkV.shape
+    if K == 0:
+        return jnp.zeros((R, R), jnp.float32)
+    Wb = fold_subject_mask(Wb, subject_mask)
+    return pl.pallas_call(
+        _reuse_kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, R, R), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1, R), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((R, R), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, R), jnp.float32),
+        interpret=interpret,
+    )(YkV, Wb)

@@ -4,41 +4,110 @@ On CPU (this container) the kernels execute with ``interpret=True`` — the
 kernel body runs in Python/XLA-CPU for correctness validation. On TPU they
 compile to Mosaic. ``use_pallas=False`` falls back to the jnp oracle (ref.py),
 which is also what the pure-JAX SPARTan path uses.
+
+These wrappers carry the full SPARTan bucket semantics (``subject_mask`` /
+``col_mask`` zeroing of padding, the ``YkV`` pre-computed reuse path) so the
+:class:`repro.core.backend.PallasBackend` can treat them as drop-in equals of
+the ``core/spartan.py`` math.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.mttkrp_mode1 import mode1_pallas
+from repro.kernels.common import fold_subject_mask
+from repro.kernels.mttkrp_mode1 import mode1_pallas, mode1_reuse_pallas
 from repro.kernels.mttkrp_mode2 import mode2_compact_pallas
-from repro.kernels.mttkrp_mode3 import mode3_pallas
+from repro.kernels.mttkrp_mode3 import mode3_pallas, mode3_reuse_pallas
+from repro.kernels.ykv import ykv_pallas
 from repro.kernels.gather_matmul import gather_matmul_pallas
 
-__all__ = ["mttkrp_mode1", "mttkrp_mode2_compact", "mttkrp_mode3", "gather_matmul"]
+__all__ = ["ykv", "mttkrp_mode1", "mttkrp_mode2_compact", "mttkrp_mode3",
+           "gather_matmul"]
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def mttkrp_mode1(Yc, Vg, Wb, *, use_pallas: bool = True, block_c: int = 512):
+def ykv(Yc: jax.Array, Vg: jax.Array, *, use_pallas: bool = True,
+        block_c: int = 512) -> jax.Array:
+    """The shared Y_k V product [K,R,R] (mode-1/3 reuse + fit)."""
     if not use_pallas:
-        return ref.mode1_ref(Yc, Vg, Wb)
-    return mode1_pallas(Yc, Vg, Wb, block_c=block_c, interpret=_interpret())
+        return ref.ykv_ref(Yc, Vg)
+    return ykv_pallas(Yc, Vg, block_c=block_c, interpret=_interpret())
 
 
-def mttkrp_mode2_compact(Yc, H, Wb, *, use_pallas: bool = True, block_c: int = 512):
+def mttkrp_mode1(
+    Yc: Optional[jax.Array],
+    Vg: Optional[jax.Array],
+    Wb: jax.Array,
+    *,
+    subject_mask: Optional[jax.Array] = None,
+    YkV: Optional[jax.Array] = None,
+    use_pallas: bool = True,
+    block_c: int = 512,
+) -> jax.Array:
+    """M1 partial [R,R]. With ``YkV`` given ([K,R,R] = Y_k V cached), Yc/Vg
+    may be None and only the Hadamard + subject reduction runs."""
+    if YkV is not None:
+        if not use_pallas:
+            return ref.mode1_reuse_ref(YkV, fold_subject_mask(Wb, subject_mask))
+        return mode1_reuse_pallas(YkV, Wb, subject_mask, interpret=_interpret())
     if not use_pallas:
-        return ref.mode2_compact_ref(Yc, H, Wb)
-    return mode2_compact_pallas(Yc, H, Wb, block_c=block_c, interpret=_interpret())
+        return ref.mode1_ref(Yc, Vg, fold_subject_mask(Wb, subject_mask))
+    return mode1_pallas(Yc, Vg, Wb, subject_mask, block_c=block_c,
+                        interpret=_interpret())
 
 
-def mttkrp_mode3(Yc, Vg, H, *, use_pallas: bool = True, block_c: int = 512):
+def mttkrp_mode2_compact(
+    Yc: jax.Array,
+    H: jax.Array,
+    Wb: jax.Array,
+    *,
+    col_mask: Optional[jax.Array] = None,
+    subject_mask: Optional[jax.Array] = None,
+    use_pallas: bool = True,
+    block_c: int = 512,
+) -> jax.Array:
+    """Compact per-column A [K,C,R]; rows for masked columns/subjects are 0."""
     if not use_pallas:
-        return ref.mode3_ref(Yc, Vg, H)
-    return mode3_pallas(Yc, Vg, H, block_c=block_c, interpret=_interpret())
+        A = ref.mode2_compact_ref(Yc, H, fold_subject_mask(Wb, subject_mask))
+        if col_mask is not None:
+            A = A * col_mask[..., None].astype(A.dtype)
+        return A
+    return mode2_compact_pallas(Yc, H, Wb, col_mask, subject_mask,
+                                block_c=block_c, interpret=_interpret())
+
+
+def mttkrp_mode3(
+    Yc: Optional[jax.Array],
+    Vg: Optional[jax.Array],
+    H: jax.Array,
+    *,
+    subject_mask: Optional[jax.Array] = None,
+    YkV: Optional[jax.Array] = None,
+    use_pallas: bool = True,
+    block_c: int = 512,
+) -> jax.Array:
+    """M3 rows [K,R]. With ``YkV`` given, Yc/Vg may be None (coldot only)."""
+    if YkV is not None:
+        if not use_pallas:
+            out = ref.mode3_reuse_ref(YkV, H)
+        else:
+            return mode3_reuse_pallas(YkV, H, subject_mask,
+                                      interpret=_interpret())
+    elif not use_pallas:
+        out = ref.mode3_ref(Yc, Vg, H)
+    else:
+        return mode3_pallas(Yc, Vg, H, subject_mask, block_c=block_c,
+                            interpret=_interpret())
+    if subject_mask is not None:
+        out = out * subject_mask[:, None].astype(out.dtype)
+    return out
 
 
 def gather_matmul(vals, blk_ids, V, *, use_pallas: bool = True):

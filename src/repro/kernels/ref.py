@@ -8,7 +8,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["mode1_ref", "mode2_compact_ref", "mode3_ref", "gather_matmul_ref"]
+__all__ = [
+    "ykv_ref",
+    "mode1_ref",
+    "mode1_reuse_ref",
+    "mode2_compact_ref",
+    "mode3_ref",
+    "mode3_reuse_ref",
+    "gather_matmul_ref",
+]
 
 
 def mode1_ref(Yc: jax.Array, Vg: jax.Array, Wb: jax.Array) -> jax.Array:
@@ -22,6 +30,16 @@ def mode1_ref(Yc: jax.Array, Vg: jax.Array, Wb: jax.Array) -> jax.Array:
     return jnp.einsum("krl,kl->rl", YkV, Wb.astype(jnp.float32))
 
 
+def ykv_ref(Yc: jax.Array, Vg: jax.Array) -> jax.Array:
+    """YkV[k] = Y_k V  ->  [K, R, R] (the shared reuse product)."""
+    return jnp.einsum("krc,kcl->krl", Yc, Vg, preferred_element_type=jnp.float32)
+
+
+def mode1_reuse_ref(YkV: jax.Array, Wb: jax.Array) -> jax.Array:
+    """sum_k YkV_k * W(k,:) with YkV [K, R, R] pre-computed -> [R, R]."""
+    return jnp.einsum("krl,kl->rl", YkV.astype(jnp.float32), Wb.astype(jnp.float32))
+
+
 def mode2_compact_ref(Yc: jax.Array, H: jax.Array, Wb: jax.Array) -> jax.Array:
     """A[k] = (Y_k^T H) * W(k,:)  ->  [K, C, R] (compact mode-2 stage)."""
     A = jnp.einsum("krc,rl->kcl", Yc, H, preferred_element_type=jnp.float32)
@@ -32,6 +50,11 @@ def mode3_ref(Yc: jax.Array, Vg: jax.Array, H: jax.Array) -> jax.Array:
     """M3 rows: out[k,:] = coldot(H, Y_k V)  ->  [K, R]."""
     YkV = jnp.einsum("krc,kcl->krl", Yc, Vg, preferred_element_type=jnp.float32)
     return jnp.einsum("rl,krl->kl", H.astype(jnp.float32), YkV)
+
+
+def mode3_reuse_ref(YkV: jax.Array, H: jax.Array) -> jax.Array:
+    """out[k,:] = coldot(H, YkV_k) with YkV [K, R, R] pre-computed -> [K, R]."""
+    return jnp.einsum("rl,krl->kl", H.astype(jnp.float32), YkV.astype(jnp.float32))
 
 
 def gather_matmul_ref(vals: jax.Array, blk_ids: jax.Array, V: jax.Array) -> jax.Array:

@@ -35,7 +35,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--scale", type=float, default=0.002)
     ap.add_argument("--rank", type=int, default=5)
     ap.add_argument("--iters", type=int, default=20)
-    ap.add_argument("--nonneg", action="store_true", default=True)
+    ap.add_argument("--nonneg", action=argparse.BooleanOptionalAction, default=True,
+                    help="nonnegativity on V/W (disable with --no-nonneg)")
+    ap.add_argument("--backend", default="auto", choices=["jnp", "pallas", "auto"],
+                    help="MTTKRP compute backend for the ALS hot loop "
+                         "(see repro.core.backend)")
     ap.add_argument("--buckets", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -51,7 +55,7 @@ def main(argv=None) -> dict:
     print(f"[bucketize] {len(bt.buckets)} buckets; padded-cell occupancy "
           f"{(1-waste)*100:.1f}% nnz")
 
-    opts = Parafac2Options(rank=args.rank, nonneg=args.nonneg)
+    opts = Parafac2Options(rank=args.rank, nonneg=args.nonneg, backend=args.backend)
     t0 = time.perf_counter()
     state, hist = fit(bt, opts, max_iters=args.iters, tol=1e-7, seed=args.seed,
                       verbose=True)

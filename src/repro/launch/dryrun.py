@@ -310,13 +310,15 @@ PARAFAC2_CELLS = {
 }
 
 
-def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E):
+def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
+                      backend: str = "jnp"):
     K, J, R, geom = PARAFAC2_CELLS[name]
     n_chips = int(np.prod(mesh.devices.shape))
     rec = {"arch": name, "shape": "als_step", "mesh": mesh_name,
            "kind": "parafac2", "n_chips": n_chips, "params": 0,
-           "active_params": 0}
-    opts = Parafac2Options(rank=R, nonneg=True, w_layout="bucketed")
+           "active_params": 0, "backend": backend}
+    opts = Parafac2Options(rank=R, nonneg=True, w_layout="bucketed",
+                           backend=backend)
     wide = rec.get("wide", True)
     dp = _axis_size(mesh, tuple(mesh.axis_names) if wide else ("pod", "data"))
     data, state = parafac2_specs(K, J, R, geom, dp)
@@ -379,6 +381,9 @@ def main(argv=None):
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--out", default=os.path.normpath(RESULTS_PATH))
     ap.add_argument("--parafac2", action="store_true", help="also run paper-workload cells")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas", "auto"],
+                    help="MTTKRP backend for the PARAFAC2 cells (the host "
+                         "placeholder mesh lowers pallas in interpret mode)")
     ap.add_argument("--sp", action="store_true", help="sequence-parallel residual stream (hillclimb)")
     ap.add_argument("--remat-policy", default="", help="override cfg.remat_policy (hillclimb)")
     ap.add_argument("--microbatches", type=int, default=1, help="gradient accumulation (train cells)")
@@ -431,12 +436,14 @@ def main(argv=None):
                         traceback.print_exc()
         if args.parafac2:
             for cell in PARAFAC2_CELLS:
-                key = f"{cell}|als_step|{mesh_name}"
+                key = (f"{cell}|als_step|{mesh_name}"
+                       + (f"+{args.backend}" if args.backend != "jnp" else ""))
                 if key in results and not args.force:
                     continue
                 print(f"[dryrun] {key} ...", flush=True)
                 try:
-                    rec = run_parafac2_cell(cell, mesh, mesh_name)
+                    rec = run_parafac2_cell(cell, mesh, mesh_name,
+                                            backend=args.backend)
                     results[key] = rec
                     save_results(args.out, results)
                     print(f"[dryrun] {key}: OK bottleneck={rec['bottleneck']} "

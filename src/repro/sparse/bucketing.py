@@ -4,7 +4,11 @@ XLA needs static shapes. Subjects vary in row count I_k and nonzero-column
 count c_k; we group them into buckets whose padded (I_pad, C_pad) geometry is
 chosen to bound padding waste while keeping the number of distinct compiled
 shapes small. Pad targets are rounded up to multiples of ``row_align`` /
-``col_align`` (8 / 128 by default — TPU sublane/lane quanta).
+``col_align`` (8 / 128 by default — TPU sublane/lane quanta; the 128 lane
+default is what the Pallas MTTKRP kernels' alignment assumption and the
+``auto`` backend's kernel-friendly check expect). Pass a smaller
+``col_align`` explicitly for CPU-only runs where padding waste matters more
+than lane alignment.
 """
 from __future__ import annotations
 
@@ -50,7 +54,7 @@ def plan_buckets(
     *,
     max_buckets: int = 4,
     row_align: int = 8,
-    col_align: int = 8,
+    col_align: int = 128,
 ) -> BucketPlan:
     """Greedy quantile bucketing on (I_k, c_k).
 

@@ -1,0 +1,206 @@
+"""Backend-parity suite: the jnp and pallas(interpret=True) MTTKRP backends
+must agree to f32 tolerance for all three modes, across odd/unaligned shapes,
+empty buckets, padded subjects, and the mode1_reuse path — the contract that
+makes ``Parafac2Options(backend=...)`` a pure performance knob."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.sparse import random_irregular, random_parafac2
+from repro.core import Parafac2Options, bucketize, fit, init_state, als_step
+from repro.core.backend import (
+    AutoBackend, BACKENDS, JnpBackend, PallasBackend, get_backend)
+
+JNP = get_backend("jnp")
+PAL = get_backend("pallas")
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _setup(seed=0, K=13, J=37, R=5, col_align=4, subject_align=1, buckets=2,
+           max_rows=9):
+    """f32 bucketed data + factors; small-align geometry exercises odd C."""
+    data = random_irregular(n_subjects=K, n_cols=J, max_rows=max_rows,
+                            avg_nnz_per_subject=18, seed=seed)
+    bt = bucketize(data, max_buckets=buckets, dtype=jnp.float32,
+                   col_align=col_align, subject_align=subject_align)
+    rng = np.random.default_rng(seed)
+    H = jnp.asarray(rng.standard_normal((R, R)), jnp.float32)
+    V = jnp.asarray(rng.standard_normal((J, R)), jnp.float32)
+    W = jnp.asarray(rng.standard_normal((K, R)), jnp.float32)
+    Ycs = [b.project(jnp.asarray(rng.standard_normal((b.kb, b.i_pad, R)),
+                                 jnp.float32)) for b in bt.buckets]
+    return bt, Ycs, H, V, W
+
+
+# geometry sweep: odd/unaligned (R=5, col_align=4), kernel-aligned
+# (R=8, col_align=128), rank-1, and subject padding inside buckets
+GEOMETRIES = [
+    dict(seed=0, K=13, J=37, R=5, col_align=4),
+    dict(seed=1, K=9, J=200, R=8, col_align=128),
+    dict(seed=2, K=7, J=21, R=1, col_align=8),
+    dict(seed=3, K=11, J=50, R=6, col_align=4, subject_align=8),
+]
+
+
+@pytest.mark.parametrize("geom", GEOMETRIES)
+def test_mode_parity(geom):
+    bt, Ycs, H, V, W = _setup(**geom)
+    K, J = bt.n_subjects, bt.n_cols
+    np.testing.assert_allclose(PAL.mttkrp_mode1(bt.buckets, Ycs, V, W),
+                               JNP.mttkrp_mode1(bt.buckets, Ycs, V, W), **TOL)
+    np.testing.assert_allclose(PAL.mttkrp_mode2(bt.buckets, Ycs, H, W, J),
+                               JNP.mttkrp_mode2(bt.buckets, Ycs, H, W, J), **TOL)
+    np.testing.assert_allclose(PAL.mttkrp_mode3(bt.buckets, Ycs, V, H, K),
+                               JNP.mttkrp_mode3(bt.buckets, Ycs, V, H, K), **TOL)
+
+
+@pytest.mark.parametrize("geom", GEOMETRIES[:2])
+def test_mode1_reuse_parity(geom):
+    """YkV pre-computed (mode1_reuse) path: both backends must match each
+    other AND their own non-reuse path."""
+    bt, Ycs, H, V, W = _setup(**geom)
+    for b, Yc in zip(bt.buckets, Ycs):
+        Vg = b.gather_v(V)
+        Wb = jnp.take(W, b.subject_ids, 0)
+        YkV = JNP.ykv(Yc, Vg)
+        # the shared Y_k V product itself must agree across backends
+        np.testing.assert_allclose(PAL.ykv(Yc, Vg), YkV, **TOL)
+        want = JNP.mode1(Yc, Vg, Wb, b.subject_mask)
+        np.testing.assert_allclose(
+            JNP.mode1(Yc, None, Wb, b.subject_mask, YkV=YkV), want, **TOL)
+        np.testing.assert_allclose(
+            PAL.mode1(Yc, None, Wb, b.subject_mask, YkV=YkV), want, **TOL)
+        # mode-3 reuse entry point ties to the same contract
+        want3 = JNP.mode3(Yc, Vg, H, b.subject_mask)
+        np.testing.assert_allclose(
+            PAL.mode3(Yc, None, H, b.subject_mask, YkV=YkV), want3, **TOL)
+
+
+def test_empty_bucket_contributes_nothing():
+    """A bucket whose subjects are all padding (mask 0) must contribute zero
+    in every mode, for both backends."""
+    bt, Ycs, H, V, W = _setup(seed=4, K=6, J=30, R=4, col_align=4)
+    b = bt.buckets[0]
+    empty = dataclasses.replace(
+        b, subject_mask=jnp.zeros_like(b.subject_mask),
+        col_mask=jnp.zeros_like(b.col_mask))
+    Yc = Ycs[0]
+    for be in (JNP, PAL):
+        Wb = jnp.take(W, empty.subject_ids, 0)
+        np.testing.assert_allclose(
+            be.mode1(Yc, empty.gather_v(V), Wb, empty.subject_mask),
+            np.zeros((4, 4)), atol=1e-6)
+        np.testing.assert_allclose(
+            be.mode2_compact(Yc, H, Wb, empty.col_mask, empty.subject_mask),
+            np.zeros(Yc.shape).transpose(0, 2, 1), atol=1e-6)
+        np.testing.assert_allclose(
+            be.mode3(Yc, empty.gather_v(V), H, empty.subject_mask),
+            np.zeros((empty.kb, 4)), atol=1e-6)
+
+
+def test_padded_subjects_do_not_leak():
+    """subject_align padding inside a bucket must not change whole-tensor
+    results: compare against the same data bucketized without padding."""
+    kw = dict(seed=5, K=10, J=40, R=4, col_align=4)
+    bt_pad, Ycs_pad, H, V, W = _setup(subject_align=8, **kw)
+    # corrupt the padded slots' Yc rows: masked slots must be ignored
+    Ycs_pad = [
+        jnp.where(b.subject_mask[:, None, None] > 0, Yc, 7.7)
+        for b, Yc in zip(bt_pad.buckets, Ycs_pad)]
+    K, J = bt_pad.n_subjects, bt_pad.n_cols
+    for be in (JNP, PAL):
+        m1 = be.mttkrp_mode1(bt_pad.buckets, Ycs_pad, V, W)
+        m1_masked = be.mttkrp_mode1(
+            bt_pad.buckets,
+            [Yc * b.subject_mask[:, None, None]
+             for b, Yc in zip(bt_pad.buckets, Ycs_pad)], V, W)
+        np.testing.assert_allclose(m1, m1_masked, **TOL)
+        m3 = be.mttkrp_mode3(bt_pad.buckets, Ycs_pad, V, H, K)
+        assert m3.shape == (K, 4)
+
+
+def test_auto_backend_matches_jnp_off_tpu():
+    """On CPU the auto backend must dispatch every call to jnp."""
+    bt, Ycs, H, V, W = _setup(seed=6)
+    auto = get_backend("auto")
+    if jax.default_backend() == "tpu":
+        pytest.skip("auto dispatches to pallas on TPU")
+    np.testing.assert_array_equal(
+        np.asarray(auto.mttkrp_mode1(bt.buckets, Ycs, V, W)),
+        np.asarray(JNP.mttkrp_mode1(bt.buckets, Ycs, V, W)))
+    np.testing.assert_array_equal(
+        np.asarray(auto.mttkrp_mode2(bt.buckets, Ycs, H, W, bt.n_cols)),
+        np.asarray(JNP.mttkrp_mode2(bt.buckets, Ycs, H, W, bt.n_cols)))
+
+
+def test_auto_dispatch_predicates(monkeypatch):
+    """The auto backend's shape/dtype predicates, exercised for the TPU
+    branch too (CI is CPU-only, so patch the platform probe)."""
+    import repro.core.backend as backend_mod
+
+    auto = AutoBackend()
+    aligned = jnp.zeros((4, 8, 128), jnp.float32)
+    ykv = jnp.zeros((4, 8, 8), jnp.float32)
+    # off-TPU: everything dispatches to jnp regardless of geometry
+    assert auto._pick(aligned) is auto._jnp
+    assert auto._pick(ykv, reuse=True) is auto._jnp
+
+    monkeypatch.setattr(backend_mod.jax, "default_backend", lambda: "tpu")
+    assert auto._kernel_friendly(aligned)
+    assert auto._pick(aligned) is auto._pallas
+    assert not auto._kernel_friendly(jnp.zeros((4, 5, 128), jnp.float32))  # odd R
+    assert not auto._kernel_friendly(jnp.zeros((4, 8, 96), jnp.float32))   # C % 128
+    assert not auto._kernel_friendly(jnp.zeros((4, 8, 128), jnp.float64))  # f64
+    assert not auto._kernel_friendly(None)
+    # reuse entry points only need the sublane quantum on R
+    assert auto._reuse_friendly(ykv)
+    assert auto._pick(ykv, reuse=True) is auto._pallas
+    assert not auto._reuse_friendly(jnp.zeros((4, 5, 5), jnp.float32))
+    assert auto._kernel_friendly(jnp.zeros((4, 16, 256), jnp.bfloat16))
+
+
+def test_get_backend_resolution():
+    assert get_backend("jnp") is BACKENDS["jnp"]
+    assert isinstance(get_backend("pallas"), PallasBackend)
+    assert isinstance(get_backend("auto"), AutoBackend)
+    be = JnpBackend()
+    assert get_backend(be) is be
+    with pytest.raises(ValueError, match="unknown MTTKRP backend"):
+        get_backend("cuda")
+
+
+def _fit_data(seed=7):
+    data, _ = random_parafac2(n_subjects=12, n_cols=24, max_rows=16, rank=3,
+                              density=0.8, seed=seed)
+    return bucketize(data, max_buckets=2, dtype=jnp.float32, col_align=4)
+
+
+@pytest.mark.parametrize("mode1_reuse", [True, False])
+def test_fit_smoke_backend_trajectories(mode1_reuse):
+    """fit() must run end-to-end through each backend with (near-)identical
+    fit trajectories — backend="pallas" exercises kernels/ops.py throughout."""
+    bt = _fit_data()
+    hists = {}
+    for backend in ("jnp", "pallas"):
+        opts = Parafac2Options(rank=3, nonneg=True, dtype=jnp.float32,
+                               backend=backend, mode1_reuse=mode1_reuse)
+        state, hist = fit(bt, opts, max_iters=5, tol=0.0, seed=0)
+        assert np.isfinite(hist).all()
+        hists[backend] = np.asarray(hist)
+    np.testing.assert_allclose(hists["pallas"], hists["jnp"],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_als_step_auto_backend_runs():
+    """auto backend end-to-end through als_step (picks jnp off-TPU, pallas
+    on TPU — either way the step must be finite and jit-compatible)."""
+    bt = _fit_data(seed=8)
+    opts = Parafac2Options(rank=3, nonneg=True, dtype=jnp.float32,
+                           backend="auto")
+    s0 = init_state(bt, opts, seed=0)
+    s1 = jax.jit(lambda s: als_step(bt, s, opts))(s0)
+    assert np.isfinite(float(s1.fit))

@@ -7,7 +7,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.sparse import random_irregular
 from repro.core import bucketize
-from repro.core import spartan
+from repro.core.backend import get_backend
 from repro.core.baseline import (
     baseline_mode1,
     baseline_mode2,
@@ -47,16 +47,10 @@ def test_modes_match_baseline(seed, R):
            for b in bt.buckets]
     Y = dense_y(bt.buckets, Ycs, J, K)
 
-    M1 = sum(
-        spartan.mode1_bucket(Yc, b.gather_v(V), jnp.take(W, b.subject_ids, 0), b.subject_mask)
-        for b, Yc in zip(bt.buckets, Ycs)
-    )
-    M2 = spartan.mttkrp_mode2(
-        [(Yc, jnp.take(W, b.subject_ids, 0), b.cols, b.col_mask, b.subject_mask)
-         for b, Yc in zip(bt.buckets, Ycs)], H, J)
-    M3 = spartan.mttkrp_mode3(
-        [(Yc, b.gather_v(V), b.subject_ids, b.subject_mask)
-         for b, Yc in zip(bt.buckets, Ycs)], H, K)
+    be = get_backend("jnp")
+    M1 = be.mttkrp_mode1(bt.buckets, Ycs, V, W)
+    M2 = be.mttkrp_mode2(bt.buckets, Ycs, H, W, J)
+    M3 = be.mttkrp_mode3(bt.buckets, Ycs, V, H, K)
 
     np.testing.assert_allclose(M1, baseline_mode1(Y, V, W), atol=1e-10)
     np.testing.assert_allclose(M2, baseline_mode2(Y, H, W), atol=1e-10)
@@ -108,11 +102,8 @@ def test_property_modes_match(seed, K, J, R):
     Ycs = [b.project(jnp.asarray(rng.standard_normal((b.kb, b.i_pad, R))))
            for b in bt.buckets]
     Y = dense_y(bt.buckets, Ycs, J, K)
-    M1 = sum(
-        spartan.mode1_bucket(Yc, b.gather_v(V), jnp.take(W, b.subject_ids, 0), b.subject_mask)
-        for b, Yc in zip(bt.buckets, Ycs))
-    M3 = spartan.mttkrp_mode3(
-        [(Yc, b.gather_v(V), b.subject_ids, b.subject_mask)
-         for b, Yc in zip(bt.buckets, Ycs)], H, K)
+    be = get_backend("jnp")
+    M1 = be.mttkrp_mode1(bt.buckets, Ycs, V, W)
+    M3 = be.mttkrp_mode3(bt.buckets, Ycs, V, H, K)
     np.testing.assert_allclose(M1, baseline_mode1(Y, V, W), atol=1e-8)
     np.testing.assert_allclose(M3, baseline_mode3(Y, H, V), atol=1e-8)
