@@ -1,0 +1,148 @@
+"""End-to-end ALS benchmark: whole decompositions, engine × backend grid.
+
+DPar2 (PAPERS.md) argues whole-decomposition time is the metric that matters —
+the MTTKRP micro benchmark (`mttkrp_micro.py`) cannot see the per-iteration
+host dispatch + `float(state.fit)` sync the host loop pays, which at small
+ranks IS the wall-clock floor. This benchmark times `iters` ALS iterations
+through each execution engine (host | scan | mesh — repro.core.engine) and
+backend (jnp | pallas) on geometry-preserving shrinks of the paper's datasets
+(`choa_like` / `movielens_like`), reporting steady-state seconds/iteration
+(compile excluded; the compiled callables are built once, then timed) plus a
+whole-run wall time.
+
+  PYTHONPATH=src python -m benchmarks.als_e2e --datasets choa --scale 0.002 \
+      --rank 5 --iters 20 --engines host,scan --json BENCH_als.json
+
+Rows: ``als/<dataset>/<engine>/<backend>``. The JSON artifact is the CI perf
+trajectory (BENCH_als.json); `benchmarks/compare.py` gates it against the
+checked-in baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Parafac2Options, bucketize, init_state
+from repro.core import engine as als_engine
+from repro.core.parafac2 import als_step
+from repro.data import choa_like, movielens_like
+from benchmarks.common import calibrate, emit, time_call
+
+
+def _load(name: str, scale: float, seed: int):
+    if name == "choa":
+        return choa_like(scale=scale, seed=seed)
+    if name == "movielens":
+        return movielens_like(scale=scale, seed=seed)
+    raise ValueError(name)
+
+
+def _make_runner(bt, opts, iters: int):
+    """A zero-arg callable running `iters` ALS iterations the way the
+    engine's fitting loop would, from a fixed init state, returning the final
+    fit. Compiled callables are built ONCE here so timing excludes compile;
+    donation is off so the init state survives repeated timed runs."""
+    state0 = init_state(bt, opts, seed=0)
+
+    if opts.engine == "host":
+        step = jax.jit(lambda s: als_step(bt, s, opts))
+
+        def run():
+            s = state0
+            f = float("nan")
+            for _ in range(iters):
+                s = step(s)
+                f = float(s.fit)   # the host loop's per-iteration device sync
+            return f
+
+        return run
+
+    # scan/mesh: ceil(iters / check_every) chunk dispatches, one sync each
+    lengths = []
+    left = iters
+    while left > 0:
+        n = min(opts.check_every or iters, left)
+        lengths.append(n)
+        left -= n
+    chunks = {n: als_engine.make_als_chunk(bt, opts, n, donate=False)
+              for n in set(lengths)}
+
+    def run():
+        s = state0
+        f = float("nan")
+        for n in lengths:
+            s, fits = chunks[n](s)
+            f = float(np.asarray(fits)[-1])
+        return f
+
+    return run
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="choa,movielens")
+    ap.add_argument("--scale", type=float, default=0.002)
+    ap.add_argument("--rank", type=int, default=5)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--engines", default="host,scan",
+                    help="comma list from host,scan,mesh")
+    ap.add_argument("--backends", default="jnp",
+                    help="comma list from jnp,pallas,auto")
+    ap.add_argument("--check-every", type=int, default=10)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repetitions per case (median reported)")
+    ap.add_argument("--json", default="",
+                    help="write per-case timings to this JSON file")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    engines = [s.strip() for s in args.engines.split(",") if s.strip()]
+    backends = [s.strip() for s in args.backends.split(",") if s.strip()]
+    results = {"config": {
+        "scale": args.scale, "rank": args.rank, "iters": args.iters,
+        "check_every": args.check_every, "platform": jax.default_backend(),
+        "calib_seconds": calibrate(),
+    }}
+
+    for ds in [s.strip() for s in args.datasets.split(",") if s.strip()]:
+        data = _load(ds, args.scale, args.seed)
+        align = len(jax.devices()) if "mesh" in engines else 1
+        bt = bucketize(data, max_buckets=4, dtype=jnp.float32,
+                       subject_align=align)
+        host_per_iter = {}
+        for engine in engines:
+            for backend in backends:
+                opts = Parafac2Options(
+                    rank=args.rank, nonneg=True, backend=backend,
+                    engine=engine, check_every=args.check_every)
+                run = _make_runner(bt, opts, args.iters)
+                seconds, final_fit = time_call(run, warmup=2,
+                                               iters=args.repeats)
+                per_iter = seconds / args.iters
+                rel = ""
+                if engine == "host":
+                    host_per_iter[backend] = per_iter
+                elif backend in host_per_iter:
+                    speedup = host_per_iter[backend] / per_iter
+                    rel = f"speedup_vs_host={speedup:.2f}x"
+                emit(f"als/{ds}/{engine}/{backend}", per_iter,
+                     f"fit={final_fit:.4f} {rel}".strip())
+                rec = {"seconds_per_iter": per_iter, "seconds_total": seconds,
+                       "iters": args.iters, "final_fit": final_fit,
+                       "n_subjects": data.n_subjects, "nnz": data.nnz}
+                if rel:
+                    rec["speedup_vs_host_per_iter"] = speedup
+                results[f"{ds}/{engine}/{backend}"] = rec
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,9 @@ import time
 from typing import Callable, Tuple
 
 import jax
+import jax.numpy as jnp
 
-__all__ = ["time_call", "emit"]
+__all__ = ["time_call", "emit", "calibrate"]
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3,
@@ -34,3 +35,25 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3,
 def emit(name: str, seconds: float, derived: str = "") -> None:
     """One CSV row: name,us_per_call,derived."""
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def calibrate(iters: int = 5) -> float:
+    """Median seconds of a fixed reference workload (jitted matmul chain).
+
+    Every benchmark stamps this into its JSON (``config.calib_seconds``) so
+    the perf gate (`benchmarks/compare.py`) can normalize timings across
+    machines of different speed: a run is compared as ``time / calib``
+    against the checked-in baseline's ``time / calib`` — a CI runner that is
+    uniformly 2× slower than the baseline machine does not trip the gate,
+    a real regression in one case still does.
+    """
+    x = jnp.ones((256, 256), jnp.float32)
+
+    @jax.jit
+    def ref(x):
+        for _ in range(8):
+            x = jnp.tanh(x @ x) * 0.5
+        return x
+
+    t, _ = time_call(ref, x, warmup=2, iters=iters)
+    return t

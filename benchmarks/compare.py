@@ -1,0 +1,174 @@
+"""Perf-regression gate: current benchmark JSONs vs the checked-in baseline.
+
+  PYTHONPATH=src python -m benchmarks.compare \
+      --baseline benchmarks/BENCH_baseline.json \
+      --current als=BENCH_als.json --current mttkrp=BENCH_mttkrp.json \
+      --threshold 1.5 --append BENCH_trajectory.jsonl
+
+The baseline file holds one namespace per benchmark (``als`` from
+`als_e2e.py`, ``mttkrp`` from `mttkrp_micro.py`), each namespace being that
+benchmark's raw ``--json`` output. Rules:
+
+* lower-is-better timing leaves (``us_per_call``, ``seconds_per_iter``)
+  REGRESS when ``current > threshold * baseline``;
+* higher-is-better leaves (any key containing ``speedup``) regress when
+  ``current < baseline / threshold``;
+* timing leaves are gated on their deviation from the namespace's COMMON
+  speed shift: with ≥3 shared timing rows the per-case ratio is divided by
+  the median current/baseline ratio (self-normalization — a CI runner that
+  is uniformly 2× slower than the baseline machine shifts every row equally
+  and cancels out; a real regression in one case is an outlier and still
+  trips). With fewer rows, the ``config.calib_seconds`` reference-workload
+  timing (see `benchmarks/common.calibrate`) normalizes instead, falling
+  back to raw ratios. Speedup leaves are ratios already — never normalized;
+* cases missing on either side are reported but never fail (the grid may
+  grow or shrink across PRs); ``seconds_total``/``relerr``/config values are
+  informational only;
+* ``--skip SUBSTRING`` (repeatable) exempts matching case paths from the
+  gate while keeping them in the report and trajectory — CI skips
+  ``/pallas`` timings, which on CPU come from interpret-mode emulation (a
+  correctness tool whose wall time is meaningless and noisy).
+
+``--append`` appends one JSON line (timestamp + all current namespaces) to a
+trajectory file — CI persists it across runs via actions/cache, so the
+BENCH_* artifacts accumulate the perf history of the repo.
+
+Exit code 1 on any regression — this is the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, Iterator, Tuple
+
+# leaves the gate compares; everything else is informational
+_LOWER_BETTER = ("us_per_call", "seconds_per_iter")
+_HIGHER_BETTER = ("speedup",)
+
+
+def _timing_leaves(tree: dict, prefix: str = "") -> Iterator[Tuple[str, str, float]]:
+    """Yield (path, kind, value) for every gated numeric leaf."""
+    for key, val in tree.items():
+        path = f"{prefix}/{key}" if prefix else key
+        if isinstance(val, dict):
+            if key != "config":
+                yield from _timing_leaves(val, path)
+        elif isinstance(val, (int, float)):
+            if any(k in key for k in _HIGHER_BETTER):
+                yield path, "higher", float(val)
+            elif any(k in key for k in _LOWER_BETTER):
+                yield path, "lower", float(val)
+
+
+def _calib(ns: dict) -> float:
+    return float(ns.get("config", {}).get("calib_seconds", 0.0)) or 0.0
+
+
+def compare_namespace(name: str, base: dict, cur: dict, threshold: float,
+                      skip: Tuple[str, ...] = ()) -> Tuple[list, list]:
+    """-> (regressions, report_rows) for one benchmark namespace."""
+    b_calib, c_calib = _calib(base), _calib(cur)
+    base_leaves = dict((p, (k, v)) for p, k, v in _timing_leaves(base))
+    cur_leaves = dict((p, (k, v)) for p, k, v in _timing_leaves(cur))
+
+    # common speed shift of this namespace: median per-case ratio over the
+    # shared GATED lower-better rows (--skip-exempted rows are excluded —
+    # they are skipped precisely because their timings are noise, so they
+    # must not control the scale); calibration-workload ratio as fallback
+    shared = [(cur_leaves[p][1] / v) for p, (k, v) in base_leaves.items()
+              if k == "lower" and p in cur_leaves and v > 0
+              and not any(s in f"{name}/{p}" for s in skip)]
+    if len(shared) >= 3:
+        scale = sorted(shared)[len(shared) // 2]
+        how = "vs median shift"
+    elif b_calib > 0 and c_calib > 0:
+        scale = c_calib / b_calib
+        how = "calib-normalized"
+    else:
+        scale = 1.0
+        how = "raw"
+
+    regressions, rows = [], []
+    for path, (kind, bval) in sorted(base_leaves.items()):
+        if path not in cur_leaves:
+            rows.append((f"{name}/{path}", "MISSING in current", ""))
+            continue
+        _, cval = cur_leaves[path]
+        if kind == "lower":
+            ratio = (cval / bval) / scale if bval > 0 else float("inf")
+            bad = ratio > threshold
+            verdict = f"{ratio:.2f}x ({how})"
+        else:  # higher-is-better ratio metrics, never normalized
+            ratio = cval / bval if bval > 0 else float("inf")
+            bad = ratio < 1.0 / threshold
+            verdict = f"{ratio:.2f}x of baseline"
+        if any(s in f"{name}/{path}" for s in skip):
+            rows.append((f"{name}/{path}", verdict, "skipped (not gated)"))
+            continue
+        rows.append((f"{name}/{path}", verdict, "REGRESSED" if bad else "ok"))
+        if bad:
+            regressions.append(f"{name}/{path}: baseline={bval:.4g} "
+                               f"current={cval:.4g} ({verdict})")
+    for path in sorted(set(cur_leaves) - set(base_leaves)):
+        rows.append((f"{name}/{path}", "new case (no baseline)", ""))
+    return regressions, rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="checked-in baseline JSON (namespace -> benchmark output)")
+    ap.add_argument("--current", action="append", default=[],
+                    metavar="NAME=PATH",
+                    help="current benchmark output, e.g. als=BENCH_als.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when a timed case regresses more than this factor")
+    ap.add_argument("--skip", action="append", default=[], metavar="SUBSTRING",
+                    help="exempt case paths containing SUBSTRING from the "
+                         "gate (still reported and appended)")
+    ap.add_argument("--append", default="", metavar="PATH",
+                    help="append the current results as one line to this "
+                         "JSONL trajectory file")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    currents: Dict[str, dict] = {}
+    for spec in args.current:
+        name, _, path = spec.partition("=")
+        if not path:
+            ap.error(f"--current needs NAME=PATH, got {spec!r}")
+        with open(path) as f:
+            currents[name] = json.load(f)
+
+    all_regressions = []
+    for name, cur in currents.items():
+        if name not in baseline:
+            print(f"[compare] namespace {name!r} not in baseline — skipped")
+            continue
+        regs, rows = compare_namespace(name, baseline[name], cur,
+                                       args.threshold, tuple(args.skip))
+        for path, verdict, flag in rows:
+            print(f"  {path:55s} {verdict:28s} {flag}")
+        all_regressions += regs
+
+    if args.append:
+        with open(args.append, "a") as f:
+            f.write(json.dumps({"ts": time.time(), **currents},
+                               default=float) + "\n")
+        print(f"[compare] appended run to {args.append}")
+
+    if all_regressions:
+        print(f"\n[compare] {len(all_regressions)} regression(s) "
+              f"(> {args.threshold}x vs baseline):")
+        for r in all_regressions:
+            print("  " + r)
+        return 1
+    print(f"\n[compare] OK — no case regressed > {args.threshold}x vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,7 @@ from repro.core import bucketize
 from repro.core.backend import get_backend
 from repro.core.baseline import baseline_mode1, baseline_mode2, baseline_mode3, dense_y
 from repro.sparse import random_irregular
-from benchmarks.common import emit, time_call
+from benchmarks.common import calibrate, emit, time_call
 
 
 def main(argv=None):
@@ -61,7 +61,8 @@ def main(argv=None):
         base[name] = time_call(fn, *fargs, iters=args.iters)
 
     results = {"config": {"subjects": K, "cols": J, "rank": R,
-                          "platform": jax.default_backend()}}
+                          "platform": jax.default_backend(),
+                          "calib_seconds": calibrate()}}
     for bname in [s.strip() for s in args.backends.split(",") if s.strip()]:
         be = get_backend(bname)
         sp_fns = {

@@ -9,8 +9,13 @@ from repro.core.parafac2 import (
     init_state,
     reconstruct_uk,
 )
+from repro.core.engine import ENGINES, fit_device, make_als_chunk, make_als_while
 
 __all__ = [
+    "ENGINES",
+    "fit_device",
+    "make_als_chunk",
+    "make_als_while",
     "Bucket",
     "Bucketed",
     "BlockBucket",

@@ -33,6 +33,7 @@ from repro.core.irregular import Bucket, Bucketed
 from repro.core.backend import MttkrpBackend, get_backend
 from repro.core.cp import cp_gram, factor_update, normalize_columns
 from repro.core.procrustes import solve_q
+from repro.dist.sharding import psum_subjects
 
 __all__ = ["Parafac2State", "Parafac2Options", "init_state", "als_step", "fit", "reconstruct_uk", "w_global"]
 
@@ -61,6 +62,20 @@ class Parafac2Options:
     # per-bucket [Kb,R] rows aligned with the data shards — no W gathers under
     # pjit; the layout production runs use, §Perf 'bucketed W').
     w_layout: str = "global"
+    # Execution engine for fit() (see repro.core.engine):
+    #   "host"  — one jitted als_step dispatch per iteration, host-side
+    #             convergence check (the exact reference loop);
+    #   "scan"  — device-resident lax.scan over chunks of `check_every`
+    #             iterations per dispatch, donated state carry, fit history
+    #             accumulated on device (convergence checked per chunk);
+    #   "mesh"  — the scanned step additionally wrapped in shard_map over the
+    #             subjects bucket axis (explicit psums at the cross-subject
+    #             reductions; dist.sharding.subject_mesh_axes picks the axes).
+    engine: str = "host"
+    # Iterations per device dispatch for the scan/mesh engines. 0 selects the
+    # lax.while_loop variant: the whole run is ONE dispatch with the tol
+    # check evaluated on device (exact host stopping semantics).
+    check_every: int = 10
 
 
 def init_state(data: Bucketed, opts: Parafac2Options, seed: int = 0) -> Parafac2State:
@@ -89,7 +104,9 @@ def _w_rows(W, b: Bucket, i: int):
 
 def _w_gram(W):
     if isinstance(W, tuple):
-        return sum(wb.T @ wb for wb in W)
+        # bucketed W is sharded with the data: the gram is a cross-subject
+        # reduction (global W is replicated, so no psum on that branch)
+        return psum_subjects(sum(wb.T @ wb for wb in W))
     return W.T @ W
 
 
@@ -152,6 +169,7 @@ def als_step(
             M1 = M1 + be.mode1(Yc, None, Wb, b.subject_mask, YkV=YkV)
         else:
             M1 = M1 + be.mode1(Yc, b.gather_v(V), Wb, b.subject_mask)
+    M1 = psum_subjects(M1)
     H_new = factor_update(M1, _w_gram(W) * (V.T @ V), H, nonneg=False)
     H_new, h_norms = normalize_columns(H_new)
     W = scale_w(W, h_norms)         # absorb scale (model-invariant)
@@ -162,6 +180,7 @@ def als_step(
         Wb = _w_rows(W, b, i)
         A = be.mode2_compact(Yc, H_new, Wb, b.col_mask, b.subject_mask)
         M2 = M2 + be.mode2_scatter(A, b.cols, J).astype(M2.dtype)
+    M2 = psum_subjects(M2)
     V_new = factor_update(M2, _w_gram(W) * (H_new.T @ H_new), V, nonneg=opts.nonneg,
                           nnls_sweeps=opts.nnls_sweeps)
     V_new, v_norms = normalize_columns(V_new)
@@ -187,6 +206,7 @@ def als_step(
         M3 = jnp.zeros((K, R), opts.dtype)
         for b, rows in zip(data.buckets, rows_per_bucket):
             M3 = M3.at[b.subject_ids].add(rows.astype(M3.dtype))
+        M3 = psum_subjects(M3)
         W_new = factor_update(M3, gram3, W, nonneg=opts.nonneg,
                               nnls_sweeps=opts.nnls_sweeps)
 
@@ -194,13 +214,14 @@ def als_step(
     # ||X_k - Q_k H S_k V^T||^2 = ||X||^2 - 2 tr(S H^T G_k) + tr(S Φ S V^T V),
     # with G_k = Y_k V_new and Φ = H^T H — all R x R algebra.
     Phi = H_new.T @ H_new
-    resid = jnp.asarray(data.norm_sq, opts.dtype)
+    delta = jnp.zeros((), opts.dtype)
     for i, (b, (Yc, _, _)) in enumerate(zip(data.buckets, per_bucket)):
         G = Gs[i]                                              # [Kb, R, R]
         Wb = _w_rows(W_new, b, i)                              # [Kb, R]
         cross = jnp.einsum("rl,krl,kl,k->", H_new, G, Wb, b.subject_mask)
         model = jnp.einsum("rl,rl,kr,kl,k->", Phi, VtV, Wb, Wb, b.subject_mask)
-        resid = resid - 2.0 * cross + model
+        delta = delta - 2.0 * cross + model
+    resid = jnp.asarray(data.norm_sq, opts.dtype) + psum_subjects(delta)
     fit_val = 1.0 - jnp.sqrt(jnp.maximum(resid, 0.0)) / jnp.sqrt(
         jnp.asarray(data.norm_sq, opts.dtype))
 
@@ -217,7 +238,16 @@ def fit(
     verbose: bool = False,
     state: Optional[Parafac2State] = None,
 ) -> Tuple[Parafac2State, List[float]]:
-    """Full fitting loop with fit-change convergence (host-side loop)."""
+    """Full fitting loop with fit-change convergence.
+
+    ``opts.engine`` picks the execution engine: "host" is the reference loop
+    below (one jitted dispatch + one device sync per iteration); "scan" and
+    "mesh" run device-resident compiled chunks (see :mod:`repro.core.engine`).
+    """
+    if opts.engine != "host":
+        from repro.core import engine as _engine
+        return _engine.fit_device(data, opts, max_iters=max_iters, tol=tol,
+                                  seed=seed, verbose=verbose, state=state)
     if state is None:
         state = init_state(data, opts, seed)
     step = jax.jit(lambda s: als_step(data, s, opts))

@@ -27,7 +27,10 @@ from repro.dist.sharding import (
     logical_spec,
     param_shardings,
     param_spec,
+    psum_subjects,
     shard,
+    subject_collectives,
+    subject_mesh_axes,
     unroll_active,
     unroll_loops,
 )
@@ -49,7 +52,10 @@ __all__ = [
     "param_shardings",
     "param_spec",
     "barrier",
+    "psum_subjects",
     "shard",
+    "subject_collectives",
+    "subject_mesh_axes",
     "unroll_active",
     "unroll_loops",
     "FaultInjector",

@@ -58,7 +58,10 @@ __all__ = [
     "param_shardings",
     "param_spec",
     "barrier",
+    "psum_subjects",
     "shard",
+    "subject_collectives",
+    "subject_mesh_axes",
     "unroll_active",
     "unroll_loops",
 ]
@@ -100,6 +103,7 @@ class _Ctx(threading.local):
     def __init__(self):
         self.stack = []     # [(rules, mesh), ...]
         self.unroll = 0
+        self.collective = []  # [axis_names, ...] — inside shard_map bodies
 
 
 _CTX = _Ctx()
@@ -140,6 +144,54 @@ def unroll_loops():
 
 def unroll_active() -> bool:
     return _CTX.unroll > 0
+
+
+# ---------------------------------------------------------------------------
+# manual-collective mode (shard_map bodies)
+# ---------------------------------------------------------------------------
+
+def subject_mesh_axes(mesh: Mesh, rules: Optional[Rules] = None) -> Tuple[str, ...]:
+    """Mesh axes the "subjects" logical axis resolves to on `mesh` (the axes a
+    shard_map over subjects maps manually, and psums reduce over)."""
+    rules = rules if rules is not None else (current_rules() or LM_RULES)
+    entry = rules.get("subjects")
+    if entry is None:
+        return ()
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return tuple(n for n in names if n in mesh.axis_names)
+
+
+@contextlib.contextmanager
+def subject_collectives(axis_names: Sequence[str]):
+    """Mark the enclosed trace as a shard_map body manually mapped over the
+    subjects axis: :func:`psum_subjects` becomes ``lax.psum`` over
+    `axis_names`, and :func:`shard` constraints become no-ops (inside
+    shard_map the mesh axes are already manual — ``with_sharding_constraint``
+    over them is meaningless). The mesh execution engine
+    (:mod:`repro.core.engine`) enters this around the scanned ALS step.
+    """
+    _CTX.collective.append(tuple(axis_names))
+    _CTX.stack.append((None, None))   # suppress shard() inside the body
+    try:
+        yield
+    finally:
+        _CTX.stack.pop()
+        _CTX.collective.pop()
+
+
+def psum_subjects(x: jax.Array) -> jax.Array:
+    """Cross-subject reduction hook: identity under pjit/GSPMD (sharding
+    constraints make XLA insert the all-reduces), an explicit
+    ``lax.psum`` over the subjects mesh axes inside a
+    :func:`subject_collectives` (shard_map) body. The ALS step calls this on
+    every value produced by a reduction over the subject axis (MTTKRP partial
+    sums, W grams, fit residual terms)."""
+    if not _CTX.collective:
+        return x
+    axes = _CTX.collective[-1]
+    if not axes:
+        return x
+    return jax.lax.psum(x, axes)
 
 
 # ---------------------------------------------------------------------------

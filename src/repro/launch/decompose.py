@@ -1,17 +1,23 @@
 """PARAFAC2 decomposition driver — the paper's workload as a first-class job.
 
   PYTHONPATH=src python -m repro.launch.decompose --dataset choa --scale 0.002 \
-      --rank 5 --iters 20
+      --rank 5 --iters 20 --engine scan --json out.json
+
+``--engine`` picks the ALS execution engine (host | scan | mesh — see
+repro.core.engine); ``--json`` writes the machine-readable run summary CI and
+the benchmarks consume.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Parafac2Options, bucketize, fit
+from repro.core import ENGINES, Parafac2Options, bucketize, fit
 from repro.core.interpret import subject_top_phenotypes, top_phenotype_features
 from repro.data import choa_like, movielens_like
 from repro.sparse import random_irregular
@@ -40,6 +46,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--backend", default="auto", choices=["jnp", "pallas", "auto"],
                     help="MTTKRP compute backend for the ALS hot loop "
                          "(see repro.core.backend)")
+    ap.add_argument("--engine", default="host", choices=list(ENGINES),
+                    help="ALS execution engine: host (per-iteration dispatch), "
+                         "scan (device-resident compiled chunks), mesh "
+                         "(scan + shard_map over subjects — see repro.core.engine)")
+    ap.add_argument("--check-every", type=int, default=10,
+                    help="iterations per device dispatch for scan/mesh "
+                         "(0 = single-dispatch lax.while_loop convergence)")
+    ap.add_argument("--tol", type=float, default=1e-7,
+                    help="fit-change convergence tolerance")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the machine-readable run summary to PATH")
     ap.add_argument("--buckets", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -49,16 +66,20 @@ def main(argv=None) -> dict:
     print(f"[data] K={data.n_subjects} J={data.n_cols} nnz={data.nnz} "
           f"({time.perf_counter()-t0:.1f}s)")
 
-    bt = bucketize(data, max_buckets=args.buckets, dtype=jnp.float32)
+    # shard_map needs every bucket's subject count to divide the shard count
+    subject_align = len(jax.devices()) if args.engine == "mesh" else 1
+    bt = bucketize(data, max_buckets=args.buckets, dtype=jnp.float32,
+                   subject_align=subject_align)
     waste = 1.0 - data.nnz / sum(
         int(np.prod(b.vals.shape)) for b in bt.buckets)
     print(f"[bucketize] {len(bt.buckets)} buckets; padded-cell occupancy "
           f"{(1-waste)*100:.1f}% nnz")
 
-    opts = Parafac2Options(rank=args.rank, nonneg=args.nonneg, backend=args.backend)
+    opts = Parafac2Options(rank=args.rank, nonneg=args.nonneg, backend=args.backend,
+                           engine=args.engine, check_every=args.check_every)
     t0 = time.perf_counter()
-    state, hist = fit(bt, opts, max_iters=args.iters, tol=1e-7, seed=args.seed,
-                      verbose=True)
+    state, hist = fit(bt, opts, max_iters=args.iters, tol=args.tol,
+                      seed=args.seed, verbose=True)
     dt = time.perf_counter() - t0
     print(f"[fit] {len(hist)} iters in {dt:.1f}s "
           f"({dt/max(len(hist),1):.2f}s/iter), fit={hist[-1]:.4f}")
@@ -67,7 +88,21 @@ def main(argv=None) -> dict:
     for r, feats in enumerate(phen):
         print(f"phenotype {r}: " + ", ".join(f"{n}({w:.2f})" for n, w in feats[:5]))
     print("subject 0 top phenotypes:", subject_top_phenotypes(np.asarray(state.W), 0))
-    return {"fit": hist[-1], "iters": len(hist), "seconds_per_iter": dt / max(len(hist), 1)}
+    summary = {
+        "dataset": args.dataset, "scale": args.scale, "rank": args.rank,
+        "engine": args.engine, "backend": args.backend, "tol": args.tol,
+        "check_every": args.check_every, "seed": args.seed,
+        "n_subjects": data.n_subjects, "n_cols": data.n_cols, "nnz": data.nnz,
+        "fit": float(hist[-1]), "fit_history": [float(f) for f in hist],
+        "iters": len(hist), "seconds_total": dt,
+        "seconds_per_iter": dt / max(len(hist), 1),
+        "platform": jax.default_backend(),
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"[json] wrote {args.json}")
+    return summary
 
 
 if __name__ == "__main__":

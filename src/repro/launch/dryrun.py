@@ -311,24 +311,48 @@ PARAFAC2_CELLS = {
 
 
 def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
-                      backend: str = "jnp"):
+                      backend: str = "jnp", engine: str = "host",
+                      check_every: int = 8):
+    """Lower + compile one PARAFAC2 cell. ``engine`` selects what one
+    dispatch is: a single als_step ("host" — today's per-iteration loop), a
+    check_every-iteration lax.scan chunk under GSPMD ("scan"), or the same
+    chunk wrapped in shard_map over the subjects axes ("mesh") — see
+    repro.core.engine."""
+    from repro.core import engine as als_engine
+
     K, J, R, geom = PARAFAC2_CELLS[name]
     n_chips = int(np.prod(mesh.devices.shape))
     rec = {"arch": name, "shape": "als_step", "mesh": mesh_name,
            "kind": "parafac2", "n_chips": n_chips, "params": 0,
-           "active_params": 0, "backend": backend}
+           "active_params": 0, "backend": backend, "engine": engine}
     opts = Parafac2Options(rank=R, nonneg=True, w_layout="bucketed",
-                           backend=backend)
+                           backend=backend, engine=engine,
+                           check_every=check_every)
     wide = rec.get("wide", True)
     dp = _axis_size(mesh, tuple(mesh.axis_names) if wide else ("pod", "data"))
     data, state = parafac2_specs(K, J, R, geom, dp)
     d_sh, s_sh = parafac2_shardings(data, state, mesh, wide=wide)
     t0 = time.perf_counter()
     with axis_rules(LM_RULES, mesh), mesh:
-        lowered = jax.jit(
-            lambda d, s: als_step(d, s, opts),
-            in_shardings=(d_sh, s_sh), out_shardings=s_sh,
-        ).lower(data, state)
+        if engine == "host":
+            step = jax.jit(
+                lambda d, s: als_step(d, s, opts),
+                in_shardings=(d_sh, s_sh), out_shardings=s_sh)
+        elif engine == "scan":
+            rec["check_every"] = check_every
+            step = jax.jit(
+                als_engine.als_chunk_fn(opts, check_every),
+                in_shardings=(d_sh, s_sh),
+                out_shardings=(s_sh, NamedSharding(mesh, P())))
+        elif engine == "mesh":
+            rec["check_every"] = check_every
+            # shard_map defines the layouts itself; no jit in_shardings
+            step = jax.jit(als_engine.mesh_wrap(
+                als_engine.als_chunk_fn(opts, check_every), data, state,
+                mesh=mesh))
+        else:
+            raise ValueError(engine)
+        lowered = step.lower(data, state)
         rec["lower_s"] = time.perf_counter() - t0
         t0 = time.perf_counter()
         compiled = lowered.compile()
@@ -384,6 +408,11 @@ def main(argv=None):
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas", "auto"],
                     help="MTTKRP backend for the PARAFAC2 cells (the host "
                          "placeholder mesh lowers pallas in interpret mode)")
+    ap.add_argument("--engine", default="host", choices=["host", "scan", "mesh"],
+                    help="ALS execution engine for the PARAFAC2 cells: what "
+                         "one lowered dispatch is (see repro.core.engine)")
+    ap.add_argument("--check-every", type=int, default=8,
+                    help="scan-chunk length for --engine scan/mesh")
     ap.add_argument("--sp", action="store_true", help="sequence-parallel residual stream (hillclimb)")
     ap.add_argument("--remat-policy", default="", help="override cfg.remat_policy (hillclimb)")
     ap.add_argument("--microbatches", type=int, default=1, help="gradient accumulation (train cells)")
@@ -437,13 +466,16 @@ def main(argv=None):
         if args.parafac2:
             for cell in PARAFAC2_CELLS:
                 key = (f"{cell}|als_step|{mesh_name}"
-                       + (f"+{args.backend}" if args.backend != "jnp" else ""))
+                       + (f"+{args.backend}" if args.backend != "jnp" else "")
+                       + (f"+{args.engine}" if args.engine != "host" else ""))
                 if key in results and not args.force:
                     continue
                 print(f"[dryrun] {key} ...", flush=True)
                 try:
                     rec = run_parafac2_cell(cell, mesh, mesh_name,
-                                            backend=args.backend)
+                                            backend=args.backend,
+                                            engine=args.engine,
+                                            check_every=args.check_every)
                     results[key] = rec
                     save_results(args.out, results)
                     print(f"[dryrun] {key}: OK bottleneck={rec['bottleneck']} "

@@ -43,6 +43,26 @@ def test_decompose_driver_synthetic():
     assert out["iters"] >= 2
 
 
+def test_decompose_driver_engine_tol_json(tmp_path):
+    """--engine scan + --tol + --json: the scan engine's final fit matches
+    the host engine's, and the JSON artifact is the machine-readable summary
+    CI/benchmarks consume."""
+    import json
+
+    path = tmp_path / "out.json"
+    common = ["--dataset", "synthetic", "--scale", "0.003", "--rank", "3",
+              "--iters", "10", "--tol", "1e-9", "--seed", "1"]
+    host = decompose_mod.main(common + ["--engine", "host"])
+    scan = decompose_mod.main(common + ["--engine", "scan", "--check-every", "4",
+                                        "--json", str(path)])
+    assert abs(scan["fit"] - host["fit"]) < 1e-5
+    blob = json.loads(path.read_text())
+    assert blob["engine"] == "scan" and blob["tol"] == 1e-9
+    assert blob["iters"] == len(blob["fit_history"])
+    assert blob["seconds_per_iter"] > 0
+    assert blob["fit"] == pytest.approx(scan["fit"])
+
+
 def test_sample_token_greedy_and_topk():
     rng = jax.random.PRNGKey(0)
     logits = jnp.asarray([[[0.1, 5.0, 0.2, 0.3]]], jnp.float32)
