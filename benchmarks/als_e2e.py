@@ -4,18 +4,22 @@ DPar2 (PAPERS.md) argues whole-decomposition time is the metric that matters —
 the MTTKRP micro benchmark (`mttkrp_micro.py`) cannot see the per-iteration
 host dispatch + `float(state.fit)` sync the host loop pays, which at small
 ranks IS the wall-clock floor. This benchmark times `iters` ALS iterations
-through each execution engine (host | scan | mesh — repro.core.engine) and
-backend (jnp | pallas) on geometry-preserving shrinks of the paper's datasets
+through each execution engine (host | scan | mesh — repro.core.engine),
+backend (jnp | pallas) and constraint route (none | nonneg | nonneg_admm |
+smooth — repro.core.constraints; COPA's claim is that AO-ADMM constraints
+ride the same MTTKRP core at negligible extra cost, and this axis measures
+exactly that) on geometry-preserving shrinks of the paper's datasets
 (`choa_like` / `movielens_like`), reporting steady-state seconds/iteration
 (compile excluded; the compiled callables are built once, then timed) plus a
 whole-run wall time.
 
   PYTHONPATH=src python -m benchmarks.als_e2e --datasets choa --scale 0.002 \
-      --rank 5 --iters 20 --engines host,scan --json BENCH_als.json
+      --rank 5 --iters 20 --engines host,scan \
+      --constraints nonneg,nonneg_admm --json BENCH_als.json
 
-Rows: ``als/<dataset>/<engine>/<backend>``. The JSON artifact is the CI perf
-trajectory (BENCH_als.json); `benchmarks/compare.py` gates it against the
-checked-in baseline.
+Rows: ``als/<dataset>/<engine>/<backend>/<constraint>``. The JSON artifact is
+the CI perf trajectory (BENCH_als.json); `benchmarks/compare.py` gates it
+against the checked-in baseline.
 """
 from __future__ import annotations
 
@@ -31,6 +35,15 @@ from repro.core import engine as als_engine
 from repro.core.parafac2 import als_step
 from repro.data import choa_like, movielens_like
 from benchmarks.common import calibrate, emit, time_call
+
+# the benchmark's constraint axis: name -> per-mode specs
+CONSTRAINT_CASES = {
+    "none": {"v": "none", "w": "none"},
+    "nonneg": {"v": "nonneg", "w": "nonneg"},            # the paper's default
+    "nonneg_admm": {"v": "nonneg_admm", "w": "nonneg_admm"},
+    "l1": {"v": "nonneg+l1:0.1", "w": "nonneg"},
+    "smooth": {"v": "nonneg", "w": "smooth:0.1"},
+}
 
 
 def _load(name: str, scale: float, seed: int):
@@ -92,6 +105,8 @@ def main(argv=None):
                     help="comma list from host,scan,mesh")
     ap.add_argument("--backends", default="jnp",
                     help="comma list from jnp,pallas,auto")
+    ap.add_argument("--constraints", default="nonneg",
+                    help=f"comma list from {','.join(CONSTRAINT_CASES)}")
     ap.add_argument("--check-every", type=int, default=10)
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed repetitions per case (median reported)")
@@ -102,6 +117,11 @@ def main(argv=None):
 
     engines = [s.strip() for s in args.engines.split(",") if s.strip()]
     backends = [s.strip() for s in args.backends.split(",") if s.strip()]
+    constraints = [s.strip() for s in args.constraints.split(",") if s.strip()]
+    for c in constraints:
+        if c not in CONSTRAINT_CASES:
+            raise SystemExit(f"unknown constraint case {c!r}; choose from "
+                             f"{', '.join(CONSTRAINT_CASES)}")
     results = {"config": {
         "scale": args.scale, "rank": args.rank, "iters": args.iters,
         "check_every": args.check_every, "platform": jax.default_backend(),
@@ -116,27 +136,30 @@ def main(argv=None):
         host_per_iter = {}
         for engine in engines:
             for backend in backends:
-                opts = Parafac2Options(
-                    rank=args.rank, nonneg=True, backend=backend,
-                    engine=engine, check_every=args.check_every)
-                run = _make_runner(bt, opts, args.iters)
-                seconds, final_fit = time_call(run, warmup=2,
-                                               iters=args.repeats)
-                per_iter = seconds / args.iters
-                rel = ""
-                if engine == "host":
-                    host_per_iter[backend] = per_iter
-                elif backend in host_per_iter:
-                    speedup = host_per_iter[backend] / per_iter
-                    rel = f"speedup_vs_host={speedup:.2f}x"
-                emit(f"als/{ds}/{engine}/{backend}", per_iter,
-                     f"fit={final_fit:.4f} {rel}".strip())
-                rec = {"seconds_per_iter": per_iter, "seconds_total": seconds,
-                       "iters": args.iters, "final_fit": final_fit,
-                       "n_subjects": data.n_subjects, "nnz": data.nnz}
-                if rel:
-                    rec["speedup_vs_host_per_iter"] = speedup
-                results[f"{ds}/{engine}/{backend}"] = rec
+                for cname in constraints:
+                    opts = Parafac2Options(
+                        rank=args.rank, constraints=CONSTRAINT_CASES[cname],
+                        backend=backend, engine=engine,
+                        check_every=args.check_every)
+                    run = _make_runner(bt, opts, args.iters)
+                    seconds, final_fit = time_call(run, warmup=2,
+                                                   iters=args.repeats)
+                    per_iter = seconds / args.iters
+                    rel = ""
+                    if engine == "host":
+                        host_per_iter[(backend, cname)] = per_iter
+                    elif (backend, cname) in host_per_iter:
+                        speedup = host_per_iter[(backend, cname)] / per_iter
+                        rel = f"speedup_vs_host={speedup:.2f}x"
+                    emit(f"als/{ds}/{engine}/{backend}/{cname}", per_iter,
+                         f"fit={final_fit:.4f} {rel}".strip())
+                    rec = {"seconds_per_iter": per_iter,
+                           "seconds_total": seconds,
+                           "iters": args.iters, "final_fit": final_fit,
+                           "n_subjects": data.n_subjects, "nnz": data.nnz}
+                    if rel:
+                        rec["speedup_vs_host_per_iter"] = speedup
+                    results[f"{ds}/{engine}/{backend}/{cname}"] = rec
 
     if args.json:
         with open(args.json, "w") as f:

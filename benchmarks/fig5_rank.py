@@ -17,7 +17,7 @@ from benchmarks.common import emit, time_call
 def run(dataset: str, data, ranks=(5, 10, 20, 40), iters: int = 3) -> None:
     bt = bucketize(data, max_buckets=4, dtype=jnp.float32)
     for R in ranks:
-        opts = Parafac2Options(rank=R, nonneg=True)
+        opts = Parafac2Options(rank=R, constraints={"v": "nonneg", "w": "nonneg"})
         state = init_state(bt, opts, seed=0)
         sp = jax.jit(lambda s: als_step(bt, s, opts))
         bl = jax.jit(lambda s: baseline_als_step(bt, s, opts))

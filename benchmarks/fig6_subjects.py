@@ -24,7 +24,7 @@ def main(argv=None):
         data = choa_like(scale=scale, seed=0)
         bt = bucketize(data, max_buckets=4, dtype=jnp.float32)
         for R in (10, 40):
-            opts = Parafac2Options(rank=R, nonneg=True)
+            opts = Parafac2Options(rank=R, constraints={"v": "nonneg", "w": "nonneg"})
             state = init_state(bt, opts, seed=0)
             sp = jax.jit(lambda s: als_step(bt, s, opts))
             bl = jax.jit(lambda s: baseline_als_step(bt, s, opts))

@@ -32,7 +32,7 @@ def run(scale: float = 0.002, ranks=(10, 40), iters: int = 3) -> None:
             avg_nnz_per_subject=250 * level, seed=17)
         bt = bucketize(data, max_buckets=4, dtype=jnp.float32)
         for R in ranks:
-            opts = Parafac2Options(rank=R, nonneg=True)
+            opts = Parafac2Options(rank=R, constraints={"v": "nonneg", "w": "nonneg"})
             state = init_state(bt, opts, seed=0)
             sp = jax.jit(lambda s: als_step(bt, s, opts))
             bl = jax.jit(lambda s: baseline_als_step(bt, s, opts))

@@ -49,7 +49,7 @@ def main():
           f"J={data.n_cols}, ragged I_k={lengths}, nnz={data.nnz}")
 
     bucketed = bucketize(data, max_buckets=2)
-    opts = Parafac2Options(rank=3, nonneg=True)
+    opts = Parafac2Options(rank=3, constraints={"v": "nonneg", "w": "nonneg"})
     state, hist = fit(bucketed, opts, max_iters=40, tol=1e-6)
     print(f"PARAFAC2 fit on activations: {hist[-1]:.4f}")
 

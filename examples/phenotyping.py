@@ -24,7 +24,7 @@ def main():
     print(f"synthetic MCP cohort: K={data.n_subjects}, J={data.n_cols}, "
           f"nnz={data.nnz}")
     bucketed = bucketize(data, max_buckets=4)
-    opts = Parafac2Options(rank=5, nonneg=True)
+    opts = Parafac2Options(rank=5, constraints={"v": "nonneg", "w": "nonneg"})
     state, hist = fit(bucketed, opts, max_iters=40, tol=1e-6)
     print(f"fit: {hist[-1]:.4f} ({len(hist)} iters)\n")
 
@@ -39,7 +39,7 @@ def main():
     for k in (0, 1):
         tops = subject_top_phenotypes(W, k, top=2)
         print(f"\n== subject {k}: top phenotypes {tops} ==")
-        sig = temporal_signature(uks[k], [r for r, _ in tops])
+        sig = temporal_signature(uks[k], [r for r, _ in tops], constraints=opts)
         for r, series in sig.items():
             spark = "".join(" .:-=+*#"[min(7, int(v / (series.max() + 1e-9) * 7))]
                             for v in series[:60])

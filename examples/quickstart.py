@@ -21,7 +21,7 @@ def main():
     bucketed = bucketize(data, max_buckets=3)
 
     # 3) fit
-    opts = Parafac2Options(rank=4, nonneg=True)
+    opts = Parafac2Options(rank=4, constraints={"v": "nonneg", "w": "nonneg"})
     state, history = fit(bucketed, opts, max_iters=60, tol=1e-7, verbose=False)
     print(f"fit after {len(history)} iterations: {history[-1]:.4f}")
     assert history[-1] > 0.5

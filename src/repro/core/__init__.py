@@ -1,10 +1,17 @@
 """Paper core: PARAFAC2 + SPARTan MTTKRP on bucketed compressed-column data."""
 from repro.core.irregular import Bucket, Bucketed, BlockBucket, bucketize, to_block_bucket, LANE
 from repro.core.backend import MttkrpBackend, get_backend
+from repro.core.constraints import (
+    Constraint,
+    available as available_constraints,
+    parse_constraint_arg,
+    parse_spec as parse_constraint_spec,
+)
 from repro.core.parafac2 import (
     Parafac2Options,
     Parafac2State,
     als_step,
+    constraints_for,
     fit,
     init_state,
     reconstruct_uk,
@@ -12,6 +19,11 @@ from repro.core.parafac2 import (
 from repro.core.engine import ENGINES, fit_device, make_als_chunk, make_als_while
 
 __all__ = [
+    "Constraint",
+    "available_constraints",
+    "constraints_for",
+    "parse_constraint_arg",
+    "parse_constraint_spec",
     "ENGINES",
     "fit_device",
     "make_als_chunk",

@@ -70,33 +70,46 @@ def baseline_als_step(data, state, opts):
     """One PARAFAC2-ALS iteration with the BASELINE CP step: materialize the
     dense intermediate tensor Y (R x J x K) and run matricization x full-KRP
     MTTKRPs — the pre-SPARTan algorithm the paper benchmarks against.
-    Procrustes/update algebra identical to repro.core.parafac2.als_step, so
-    timing differences isolate the MTTKRP reformulation."""
-    import jax as _jax
-    from repro.core.cp import cp_gram, factor_update, normalize_columns
-    from repro.core.parafac2 import Parafac2State, _procrustes_project
+    Procrustes/update algebra identical to repro.core.parafac2.als_step —
+    including the same per-mode constraint bundle and carried ADMM aux state
+    — so timing differences isolate the MTTKRP reformulation and
+    SPARTan-vs-baseline comparisons stay apples-to-apples under any
+    constraint spec."""
+    from repro.core import constraints as cst
+    from repro.core.cp import cp_gram, normalize_columns
+    from repro.core.parafac2 import (
+        Parafac2State, _procrustes_project, constraints_for)
 
     H, V, W = state.H, state.V, state.W
     R, J, K = opts.rank, data.n_cols, data.n_subjects
+    cons = constraints_for(opts)
+    solve_kw = dict(nnls_sweeps=opts.nnls_sweeps, admm_iters=opts.admm_iters)
+    aux = state.aux if isinstance(state.aux, dict) else cst.empty_aux()
     per_bucket = [_procrustes_project(b, H, V, W, opts) for b in data.buckets]
     Ycs = [pb[0] for pb in per_bucket]
     Y = dense_y(data.buckets, Ycs, J, K)                     # the memory blow-up
 
     M1 = baseline_mode1(Y, V, W)
-    H_new = factor_update(M1, cp_gram(W, V), H, nonneg=False)
-    H_new, h_norms = normalize_columns(H_new)
-    W = W * h_norms[None, :]
+    H_new, aux_h = cons["h"].update(M1, cp_gram(W, V), H, aux["h"], **solve_kw)
+    aux_w = aux["w"]
+    if not cons["h"].penalized:     # same normalization rule as als_step
+        H_new, h_norms = normalize_columns(H_new)
+        aux_h = cst.scale_aux(aux_h, 1.0 / jnp.maximum(h_norms, 1e-12))
+        W = W * h_norms[None, :]
+        aux_w = cst.scale_aux(aux_w, h_norms)
 
     M2 = baseline_mode2(Y, H_new, W)
-    V_new = factor_update(M2, cp_gram(W, H_new), V, nonneg=opts.nonneg,
-                          nnls_sweeps=opts.nnls_sweeps)
-    V_new, v_norms = normalize_columns(V_new)
-    W = W * v_norms[None, :]
+    V_new, aux_v = cons["v"].update(M2, cp_gram(W, H_new), V, aux["v"],
+                                    **solve_kw)
+    if not cons["v"].penalized:
+        V_new, v_norms = normalize_columns(V_new)
+        aux_v = cst.scale_aux(aux_v, 1.0 / jnp.maximum(v_norms, 1e-12))
+        W = W * v_norms[None, :]
+        aux_w = cst.scale_aux(aux_w, v_norms)
 
     M3 = baseline_mode3(Y, H_new, V_new)
     gram3 = (V_new.T @ V_new) * (H_new.T @ H_new)
-    W_new = factor_update(M3, gram3, W, nonneg=opts.nonneg,
-                          nnls_sweeps=opts.nnls_sweeps)
+    W_new, aux_w = cons["w"].update(M3, gram3, W, aux_w, **solve_kw)
 
     Phi = H_new.T @ H_new
     VtV = V_new.T @ V_new
@@ -107,4 +120,5 @@ def baseline_als_step(data, state, opts):
     resid = resid - 2.0 * cross + model
     fit_val = 1.0 - jnp.sqrt(jnp.maximum(resid, 0.0)) / jnp.sqrt(
         jnp.asarray(data.norm_sq, opts.dtype))
-    return Parafac2State(H=H_new, V=V_new, W=W_new, fit=fit_val)
+    return Parafac2State(H=H_new, V=V_new, W=W_new, fit=fit_val,
+                         aux={"h": aux_h, "v": aux_v, "w": aux_w})

@@ -1,0 +1,392 @@
+"""Pluggable constraint layer for PARAFAC2 factor updates (COPA-style AO-ADMM).
+
+SPARTan's MTTKRP core is constraint-agnostic: every factor update consumes
+only the MTTKRP ``M`` and the Gram matrix ``A`` of the fixed factors, so the
+*same* hot loop supports a whole family of constrained models (COPA, Afshar
+et al. 2018; tPARAFAC2, Chatzis et al. 2024) by swapping the small
+``min_X ||T - X G^T||^2 + r(X)`` solve at the end. This module is that swap
+point:
+
+* a **registry** of named constraint terms (``register_term`` /
+  ``available``), each a proximal operator plus solver metadata;
+* a **spec grammar** — ``"name[:lam][+name[:lam]...]"`` per mode, e.g.
+  ``"nonneg"``, ``"l1:0.1"``, ``"smooth:0.5"``, ``"nonneg+l1:0.1"`` — parsed
+  by :func:`parse_spec` into a :class:`Constraint`;
+* three **solver routes** per constraint:
+
+  - ``ridge``  — the unconstrained ALS update (``nnls.ridge_solve``);
+  - ``hals``   — HALS column sweeps (``nnls.hals_nnls``), the paper's
+    nonnegativity path, preserved bitwise as the default;
+  - ``admm``   — AO-ADMM (Huang et al. 2016): splitting
+    ``X``/``Z = prox_{r/rho}``/dual ``U``, with the ``(Z, U)`` pair carried
+    ACROSS outer ALS iterations as an opaque ``aux`` pytree inside
+    ``Parafac2State`` (warm-started duals are what makes a handful of inner
+    iterations per outer step sufficient).
+
+Built-in terms: ``none``, ``nonneg`` (HALS), ``nonneg_admm`` (same feasible
+set via ADMM clip-prox), ``l1`` (soft-threshold — sparse phenotypes),
+``smooth`` (quadratic temporal smoothness on factor *rows*, tPARAFAC2-style:
+``lam * sum_k ||x_k - x_{k-1}||^2``, prox = one tridiagonal solve).
+``nonneg+l1`` composes in closed form (shrink-then-clip); compositions
+without a closed-form joint prox raise at parse time.
+
+``repro.core.parafac2.als_step`` routes every factor update (H, V, W — and
+the per-bucket W layout) through :meth:`Constraint.update`; the engines
+(scan / while / mesh in ``repro.core.engine``) carry the ADMM aux state like
+any other ``Parafac2State`` leaf. See docs/ARCHITECTURE.md (stage 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.nnls import hals_nnls, ridge_solve
+
+__all__ = [
+    "MODES",
+    "Constraint",
+    "available",
+    "bundle",
+    "constraint_summary",
+    "parse_constraint_arg",
+    "parse_spec",
+    "register_term",
+]
+
+MODES = ("h", "v", "w")   # PARAFAC2 factor modes a spec dict may constrain
+
+
+# ---------------------------------------------------------------------------
+# registry of atomic terms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TermDef:
+    """One registered constraint term.
+
+    kind:        prox family — "none" | "clip" | "l1" | "smooth" | "custom"
+    solver:      solver used when the term stands alone
+    default_lam: strength when the spec omits ":lam"
+    prox:        for kind="custom": ``prox(Y, rho, lam) -> Z`` (standalone
+                 only; custom terms do not compose)
+    nonneg:      solutions are guaranteed elementwise nonnegative
+    """
+
+    kind: str
+    solver: str                      # "ridge" | "hals" | "admm"
+    default_lam: float = 0.0
+    prox: Optional[Callable] = None
+    nonneg: bool = False
+
+
+_REGISTRY: Dict[str, TermDef] = {}
+
+
+def register_term(name: str, term: TermDef) -> None:
+    """Register (or override) a named constraint term."""
+    if term.kind == "custom" and term.prox is None:
+        raise ValueError(f"custom term {name!r} needs a prox callable")
+    _REGISTRY[name] = term
+    if "parse_spec" in globals():          # built-ins register before it exists
+        parse_spec.cache_clear()           # overrides must reach parsed specs
+
+
+def available() -> Tuple[str, ...]:
+    """Registered term names (sorted) — used in error messages and --help."""
+    return tuple(sorted(_REGISTRY))
+
+
+register_term("none", TermDef(kind="none", solver="ridge"))
+register_term("nonneg", TermDef(kind="clip", solver="hals", nonneg=True))
+register_term("nonneg_admm", TermDef(kind="clip", solver="admm", nonneg=True))
+register_term("l1", TermDef(kind="l1", solver="admm", default_lam=0.1))
+register_term("smooth", TermDef(kind="smooth", solver="admm", default_lam=0.1))
+
+
+# ---------------------------------------------------------------------------
+# prox operators
+# ---------------------------------------------------------------------------
+
+def prox_nonneg(Y: jax.Array) -> jax.Array:
+    """Projection onto the nonnegative orthant."""
+    return jnp.maximum(Y, 0.0)
+
+
+def prox_l1(Y: jax.Array, t) -> jax.Array:
+    """Soft-threshold: prox of ``t * ||.||_1`` (elementwise shrink)."""
+    return jnp.sign(Y) * jnp.maximum(jnp.abs(Y) - t, 0.0)
+
+
+def prox_nonneg_l1(Y: jax.Array, t) -> jax.Array:
+    """Joint prox of nonnegativity + l1: shrink-then-clip (closed form)."""
+    return jnp.maximum(Y - t, 0.0)
+
+
+def prox_smooth(Y: jax.Array, rho, lam) -> jax.Array:
+    """Prox of ``lam * sum_k ||y_k - y_{k-1}||^2`` over the leading axis.
+
+    Minimizes ``rho/2 ||Z - Y||^2 + lam ||D Z||^2`` (D = first differences
+    over rows): ``(rho I + 2 lam D^T D) Z = rho Y``, a symmetric tridiagonal
+    system solved in O(K R) per call (``lax.linalg.tridiagonal_solve``).
+    """
+    K = Y.shape[0]
+    if K < 2:
+        return Y
+    dt = Y.dtype
+    rho = jnp.asarray(rho, dt)
+    two_lam = jnp.asarray(2.0 * lam, dt)
+    # D^T D diag = [1, 2, ..., 2, 1], off-diag = -1
+    dtd_diag = jnp.full((K,), 2.0, dt).at[0].set(1.0).at[K - 1].set(1.0)
+    d = rho + two_lam * dtd_diag
+    off = jnp.full((K - 1,), -1.0, dt) * two_lam
+    dl = jnp.concatenate([jnp.zeros((1,), dt), off])
+    du = jnp.concatenate([off, jnp.zeros((1,), dt)])
+    return lax.linalg.tridiagonal_solve(dl, d, du, rho * Y)
+
+
+# ---------------------------------------------------------------------------
+# spec parsing -> Constraint
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    """A parsed per-mode constraint: solver route + composed prox + aux shape.
+
+    ``spec`` is the canonical string (stable across equivalent inputs);
+    ``terms`` the resolved ``(name, lam)`` pairs. ``admm`` constraints carry
+    ``(Z, U)`` dual state as an opaque pytree through ``Parafac2State.aux``.
+    """
+
+    spec: str
+    terms: Tuple[Tuple[str, float], ...]
+
+    # -- derived metadata ----------------------------------------------------
+    @property
+    def _defs(self) -> Tuple[TermDef, ...]:
+        return tuple(_REGISTRY[n] for n, _ in self.terms)
+
+    @property
+    def solver(self) -> str:
+        if len(self.terms) == 1:
+            return self._defs[0].solver
+        return "admm"
+
+    @property
+    def admm(self) -> bool:
+        return self.solver == "admm"
+
+    @property
+    def nonneg(self) -> bool:
+        """True when fitted factors are guaranteed elementwise nonnegative."""
+        return any(d.nonneg for d in self._defs)
+
+    @property
+    def smooth_lam(self) -> float:
+        return sum(lam for (n, lam), d in zip(self.terms, self._defs)
+                   if d.kind == "smooth")
+
+    @property
+    def penalized(self) -> bool:
+        """True when the constraint adds a PENALTY term (l1 / smooth /
+        custom with lam > 0) rather than only an indicator (none / nonneg).
+        The ALS loop skips column normalization for penalized modes: the
+        penalized objective is not scale-invariant, and
+        normalize-then-absorb-into-W would silently rescale the penalty
+        every iteration."""
+        return any(lam > 0 and d.kind not in ("none", "clip")
+                   for (_, lam), d in zip(self.terms, self._defs))
+
+    # -- composed prox -------------------------------------------------------
+    def prox(self, Y: jax.Array, rho) -> jax.Array:
+        """Joint prox of all terms at penalty ``rho`` (validated composable
+        at parse time)."""
+        kinds = {d.kind for d in self._defs}
+        if "custom" in kinds:
+            ((name, lam),), (d,) = self.terms, self._defs
+            return d.prox(Y, rho, lam)
+        if "smooth" in kinds:
+            return prox_smooth(Y, rho, self.smooth_lam)
+        l1_lam = sum(lam for (n, lam), d in zip(self.terms, self._defs)
+                     if d.kind == "l1")
+        t = l1_lam / rho
+        if "clip" in kinds:
+            return prox_nonneg_l1(Y, t) if l1_lam else prox_nonneg(Y)
+        if l1_lam:
+            return prox_l1(Y, t)
+        return Y
+
+    # -- aux (ADMM dual) state ----------------------------------------------
+    def init_aux(self, x0: jax.Array):
+        """Initial carried solver state for a factor shaped like ``x0``:
+        ``(Z, U)`` for ADMM constraints, ``()`` otherwise."""
+        if not self.admm:
+            return ()
+        return (self.prox(x0, jnp.asarray(1.0, x0.dtype)), jnp.zeros_like(x0))
+
+    # -- the factor update ---------------------------------------------------
+    def update(self, M: jax.Array, A: jax.Array, prev: jax.Array, aux,
+               *, nnls_sweeps: int = 5, admm_iters: int = 10):
+        """Solve ``min_X ||T - X G^T||^2 + r(X)`` given MTTKRP ``M = T G``
+        and Gram ``A = G^T G``; returns ``(X, aux')``.
+
+        ridge/hals routes are byte-for-byte the pre-refactor updates (the
+        legacy ``nonneg`` flag's two branches); the admm route warm-starts
+        from the carried ``(Z, U)`` pair and returns the updated pair.
+        """
+        if self.solver == "ridge":
+            return ridge_solve(M, A), ()
+        if self.solver == "hals":
+            return hals_nnls(M, A, prev, sweeps=nnls_sweeps), ()
+        if not aux:
+            aux = self.init_aux(prev)
+        return admm_solve(M, A, aux, self.prox, iters=admm_iters)
+
+
+def _canon(name: str, lam: float, d: TermDef) -> str:
+    return f"{name}:{lam:g}" if d.default_lam or lam else name
+
+
+@functools.lru_cache(maxsize=None)
+def parse_spec(spec: str) -> Constraint:
+    """Parse ``"name[:lam][+...]"`` into a :class:`Constraint`.
+
+    Unknown names raise ``ValueError`` listing the registered terms;
+    compositions without a closed-form joint prox raise too.
+    """
+    raw = [p.strip() for p in str(spec).split("+") if p.strip()]
+    if not raw:
+        raw = ["none"]
+    terms = []
+    for part in raw:
+        name, _, lam_s = part.partition(":")
+        name = name.strip()
+        if name not in _REGISTRY:
+            raise ValueError(
+                f"unknown constraint {name!r} in spec {spec!r}; "
+                f"registered constraints: {', '.join(available())}")
+        d = _REGISTRY[name]
+        if lam_s and d.kind in ("none", "clip"):
+            raise ValueError(
+                f"constraint {name!r} is an indicator (no strength knob); "
+                f"{part!r} is invalid")
+        try:
+            lam = float(lam_s) if lam_s else d.default_lam
+        except ValueError:
+            raise ValueError(f"bad strength {lam_s!r} in constraint {part!r}")
+        if lam < 0:
+            raise ValueError(f"negative strength in constraint {part!r}")
+        terms.append((name, lam))
+    # drop redundant "none" terms when composed with anything else
+    if len(terms) > 1:
+        terms = [t for t in terms if _REGISTRY[t[0]].kind != "none"] or terms[:1]
+    kinds = [_REGISTRY[n].kind for n, _ in terms]
+    if len(terms) > 1:
+        if "custom" in kinds:
+            raise ValueError(f"custom constraint terms do not compose: {spec!r}")
+        if "smooth" in kinds:
+            raise ValueError(
+                f"no closed-form joint prox for {spec!r}: 'smooth' cannot be "
+                f"composed with other terms (fit it on its own mode)")
+        if not set(kinds) <= {"clip", "l1"}:
+            raise ValueError(f"unsupported constraint composition {spec!r}")
+    canon = "+".join(_canon(n, lam, _REGISTRY[n]) for n, lam in terms)
+    return Constraint(spec=canon, terms=tuple(terms))
+
+
+def bundle(specs: Mapping[str, str]) -> Dict[str, Constraint]:
+    """Per-mode spec dict -> per-mode :class:`Constraint` dict (all of
+    :data:`MODES` present; missing modes unconstrained)."""
+    bad = set(specs) - set(MODES)
+    if bad:
+        raise ValueError(f"unknown constraint mode(s) {sorted(bad)}; "
+                         f"valid modes: {MODES}")
+    return {m: parse_spec(specs.get(m, "none")) for m in MODES}
+
+
+def parse_constraint_arg(arg: str) -> Dict[str, str]:
+    """Parse the driver syntax ``"v=nonneg+l1:0.1,w=smooth:0.1"``.
+
+    A bare spec with no ``mode=`` prefix applies to both V and W (the two
+    modes the paper constrains). Every spec is parsed eagerly so malformed
+    input fails here with the registered-constraint listing.
+    """
+    out: Dict[str, str] = {}
+    for part in (p.strip() for p in str(arg).split(",")):
+        if not part:
+            continue
+        if "=" in part:
+            mode, _, spec = part.partition("=")
+            mode = mode.strip().lower()
+            if mode not in MODES:
+                raise ValueError(f"unknown constraint mode {mode!r} in "
+                                 f"{arg!r}; valid modes: {MODES}")
+            out[mode] = spec.strip()
+        else:
+            out.setdefault("v", part)
+            out.setdefault("w", part)
+    for mode, spec in out.items():
+        parse_spec(spec)   # raises with the registered-constraint listing
+    return out
+
+
+def constraint_summary(specs: Mapping[str, str]) -> Dict[str, str]:
+    """Canonicalized per-mode specs (the --json summary block)."""
+    return {m: parse_spec(specs.get(m, "none")).spec for m in MODES}
+
+
+# ---------------------------------------------------------------------------
+# AO-ADMM inner solver
+# ---------------------------------------------------------------------------
+
+def admm_solve(M: jax.Array, A: jax.Array, aux, prox: Callable,
+               *, iters: int = 10):
+    """AO-ADMM for ``min_X ||T - X G^T||^2 + r(X)`` in normal form.
+
+    M:    [N, R] MTTKRP result (T G)
+    A:    [R, R] Gram (G^T G)
+    aux:  warm-start ``(Z, U)`` from the previous outer ALS iteration
+    prox: ``prox(Y, rho) -> Z``, the prox of r at penalty rho
+
+    Splitting (Huang, Sidiropoulos & Liavas 2016; COPA §3):
+        X  = (M + rho (Z - U)) (A + rho I)^{-1}     -- cholesky solve
+        Z  = prox(X + U, rho)
+        U += X - Z
+    with the standard scaling ``rho = trace(A)/R``. Returns the *feasible*
+    iterate Z and the updated ``(Z, U)`` carry.
+    """
+    R = A.shape[-1]
+    dt = M.dtype
+    rho = jnp.maximum(jnp.trace(A) / R, jnp.asarray(1e-12, A.dtype)).astype(dt)
+    L = jnp.linalg.cholesky(A.astype(dt) + rho * jnp.eye(R, dtype=dt))
+
+    def body(_, zu):
+        Z, U = zu
+        rhs = M + rho * (Z - U)
+        X = jax.scipy.linalg.cho_solve((L, True), rhs.T).T
+        Z = prox(X + U, rho)
+        U = U + X - Z
+        return (Z, U)
+
+    Z, U = lax.fori_loop(0, iters, body, aux)
+    return Z, (Z, U)
+
+
+# ---------------------------------------------------------------------------
+# aux-pytree helpers (used by the ALS step to keep scale absorption coherent)
+# ---------------------------------------------------------------------------
+
+def scale_aux(aux, col_scale: jax.Array):
+    """Rescale every aux leaf columnwise — applied whenever the owning factor
+    absorbs a column rescale, so warm-started duals stay aligned. A no-op
+    (no leaves) for non-ADMM constraints."""
+    return jax.tree_util.tree_map(lambda a: a * col_scale[None, :], aux)
+
+
+def empty_aux() -> Dict[str, Any]:
+    """The aux pytree of a fully direct (non-ADMM) constraint bundle."""
+    return {m: () for m in MODES}

@@ -103,12 +103,23 @@ def _mesh_specs(data, state, axes: Tuple[str, ...]):
 
     Every Bucket leaf is Kb-leading → split over `axes`; H/V/fit (and a
     global [K,R] W) are replicated; a bucketed W tuple splits like the data.
+    Constraint aux state (ADMM duals) follows its owning factor: the "w" aux
+    of a bucketed W splits over the subject axes, everything else replicates.
     """
     lead = P(axes if len(axes) > 1 else axes[0])
     d_specs = jax.tree_util.tree_map(lambda _: lead, data)
     W = state.W
     w_spec = tuple(lead for _ in W) if isinstance(W, tuple) else P()
-    s_specs = p2.Parafac2State(H=P(), V=P(), W=w_spec, fit=P())
+    aux = state.aux
+    if isinstance(aux, dict):
+        aux_specs = {
+            k: jax.tree_util.tree_map(
+                lambda _: lead if (k == "w" and isinstance(W, tuple)) else P(),
+                sub)
+            for k, sub in aux.items()}
+    else:
+        aux_specs = jax.tree_util.tree_map(lambda _: P(), aux)
+    s_specs = p2.Parafac2State(H=P(), V=P(), W=w_spec, fit=P(), aux=aux_specs)
     return d_specs, s_specs
 
 

@@ -10,7 +10,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["top_phenotype_features", "subject_top_phenotypes", "temporal_signature"]
+__all__ = ["top_phenotype_features", "subject_top_phenotypes",
+           "temporal_signature", "model_is_nonneg"]
 
 
 def top_phenotype_features(
@@ -35,14 +36,43 @@ def subject_top_phenotypes(W: np.ndarray, k: int, top: int = 2) -> List[Tuple[in
     return [(int(r), float(w[r])) for r in idx]
 
 
+def model_is_nonneg(constraints) -> bool:
+    """Whether a fitted model's V and W factors are guaranteed nonnegative.
+
+    ``constraints`` may be a ``Parafac2Options``, a per-mode spec mapping
+    ({"v": "nonneg+l1:0.1", ...}), or None (unknown — treated as the paper's
+    nonnegative default).
+    """
+    if constraints is None:
+        return True
+    from repro.core.constraints import parse_spec
+
+    if hasattr(constraints, "constraint_specs"):   # Parafac2Options
+        constraints = constraints.constraint_specs()
+    return all(parse_spec(constraints.get(m, "none")).nonneg
+               for m in ("v", "w"))
+
+
 def temporal_signature(
-    Uk: np.ndarray, phenotypes: Sequence[int], clip_nonneg: bool = True
+    Uk: np.ndarray,
+    phenotypes: Sequence[int],
+    clip_nonneg: Optional[bool] = None,
+    *,
+    constraints=None,
 ) -> Dict[int, np.ndarray]:
     """Temporal evolution of selected phenotypes for one subject.
 
-    Per the paper: only non-negative elements of the signature are interpreted
-    (X_k, S_k, V are all non-negative under the constrained model).
+    Per the paper: only non-negative elements of the signature are
+    interpreted — but ONLY when the model was actually fit under
+    nonnegativity (X_k, S_k, V all nonneg). ``clip_nonneg=None`` (default)
+    consults the fitted constraint spec: pass the ``Parafac2Options`` the
+    model was fit with (or its per-mode spec dict) as ``constraints``.
+    Signatures from an unconstrained or l1-only fit are returned unclipped —
+    silently zeroing their negative lobes would fabricate structure. Pass an
+    explicit ``clip_nonneg`` bool to override.
     """
+    if clip_nonneg is None:
+        clip_nonneg = model_is_nonneg(constraints)
     Uk = np.asarray(Uk)
     out = {}
     for r in phenotypes:

@@ -1,9 +1,16 @@
-"""Non-negative least squares for CP/PARAFAC2 factor updates.
+"""Least-squares solvers backing the constraint registry's direct routes.
 
-Solves  min_{X >= 0} || T - X G^T ||_F  given the MTTKRP M = T G and the Gram
-matrix A = G^T G, via HALS (hierarchical ALS) column sweeps — the standard
-scalable replacement for the active-set NNLS of Bro & de Jong used by the
-paper's MATLAB implementation. Matmul + elementwise only -> TPU-friendly.
+``hals_nnls`` solves  min_{X >= 0} || T - X G^T ||_F  given the MTTKRP
+M = T G and the Gram matrix A = G^T G, via HALS (hierarchical ALS) column
+sweeps — the standard scalable replacement for the active-set NNLS of Bro &
+de Jong used by the paper's MATLAB implementation. Matmul + elementwise only
+-> TPU-friendly. ``ridge_solve`` is the unconstrained update.
+
+These are the ``"hals"`` (spec ``nonneg``) and ``"ridge"`` (spec ``none``)
+solver routes of :mod:`repro.core.constraints`; factor updates reach them
+through the registry (``Constraint.update``), not directly. The AO-ADMM
+route (``nonneg_admm`` / ``l1`` / ``smooth`` / compositions) lives in
+``constraints.admm_solve``.
 """
 from __future__ import annotations
 
@@ -39,7 +46,15 @@ def hals_nnls(M: jax.Array, A: jax.Array, X0: jax.Array, *, sweeps: int = 5,
 
 
 def ridge_solve(M: jax.Array, A: jax.Array, *, ridge: float = 1e-10) -> jax.Array:
-    """Unconstrained ALS update  X = M A^+  via a ridge-stabilized solve."""
+    """Unconstrained ALS update  X = M A^+  via a ridge-stabilized solve.
+
+    The ridge amount is floored at a dtype-aware smallest-normal scale so a
+    fully collapsed factor (A == 0, e.g. after an aggressive l1 sweep zeroed
+    its companion) yields X == 0 instead of NaN; the floor is inactive
+    (bitwise identity) for any non-degenerate Gram.
+    """
     R = A.shape[0]
-    A_reg = A + ridge * jnp.trace(A) / R * jnp.eye(R, dtype=A.dtype)
+    floor = jnp.asarray(jnp.finfo(A.dtype).tiny, A.dtype) * 128
+    lam = jnp.maximum(ridge * jnp.trace(A) / R, floor)
+    A_reg = A + lam * jnp.eye(R, dtype=A.dtype)
     return jax.scipy.linalg.solve(A_reg, M.T, assume_a="pos").T

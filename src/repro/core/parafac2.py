@@ -5,9 +5,13 @@ One ALS iteration (Algorithm 2 of the paper) on the bucketed CC format:
   1. Procrustes step (batched over subjects): B_k = X_k V S_k H^T,
      Q_k = polar(B_k)  (Gram-eigh by default — see procrustes.py).
   2. Project: Y_k = Q_k^T X_k  (CC: shares X_k's kept-column ids).
-  3. ONE CP-ALS iteration on {Y_k} via the SPARTan mode-1/2/3 MTTKRPs:
-     H <- M1 (W^TW * V^TV)^+ ;  V <- nnls(M2, W^TW * H^TH) ;
-     W <- nnls(M3, V^TV * H^TH) ;  S_k = diag(W(k,:)).
+  3. ONE CP-ALS iteration on {Y_k} via the SPARTan mode-1/2/3 MTTKRPs; each
+     factor update (H from M1, V from M2, W from M3 and its Gram) routes
+     through the per-mode constraint layer (:mod:`repro.core.constraints`,
+     ``opts.constraints`` — COPA-style AO-ADMM; the default reproduces the
+     paper's H <- unconstrained solve, V/W <- HALS nnls bitwise, and
+     ADMM-routed constraints carry their dual state in ``state.aux``);
+     S_k = diag(W(k,:)).
   4. Fit = 1 - sqrt(sum_k ||X_k - Q_k H S_k V^T||^2) / ||X||_F.
 
 Everything inside :func:`als_step` is jit/pjit-compatible; subjects shard over
@@ -23,7 +27,8 @@ pure-jnp SPARTan math or the Pallas TPU kernels. See docs/ARCHITECTURE.md
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+import warnings
+from typing import Any, Dict, List, Mapping, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,11 +36,13 @@ import numpy as np
 
 from repro.core.irregular import Bucket, Bucketed
 from repro.core.backend import MttkrpBackend, get_backend
-from repro.core.cp import cp_gram, factor_update, normalize_columns
+from repro.core import constraints as cst
+from repro.core.cp import normalize_columns
 from repro.core.procrustes import solve_q
 from repro.dist.sharding import psum_subjects
 
-__all__ = ["Parafac2State", "Parafac2Options", "init_state", "als_step", "fit", "reconstruct_uk", "w_global"]
+__all__ = ["Parafac2State", "Parafac2Options", "constraints_for", "init_state",
+           "als_step", "fit", "reconstruct_uk", "w_global"]
 
 
 class Parafac2State(NamedTuple):
@@ -43,15 +50,29 @@ class Parafac2State(NamedTuple):
     V: jax.Array          # [J, R]
     W: jax.Array          # [K, R]  (S_k = diag(W[k]))
     fit: jax.Array        # scalar, model fit in [−inf, 1]
+    # opaque per-mode constraint-solver state (ADMM duals), carried across
+    # iterations by every engine like any other leaf: {"h": .., "v": .., "w": ..}
+    # with () for modes whose constraint is direct (none/nonneg).
+    aux: Any = ()
 
 
 @dataclasses.dataclass(frozen=True)
 class Parafac2Options:
     rank: int
-    nonneg: bool = True                 # nonneg on V, W (S_k) as in the paper
+    # Per-mode constraint specs, {"v": "nonneg+l1:0.1", "w": "smooth:0.5", ...}
+    # (modes "h"/"v"/"w"; missing modes unconstrained — see
+    # repro.core.constraints for the spec grammar and registry). None selects
+    # the legacy behaviour: nonneg on V and W as in the paper.
+    constraints: Optional[Union[Mapping[str, str], Tuple]] = None
+    # DEPRECATED: the pre-constraint-layer boolean (nonneg on V, W). Use
+    # constraints={"v": "nonneg", "w": "nonneg"} / {"v": "none", "w": "none"}.
+    nonneg: Optional[bool] = None
     procrustes: str = "gram_eigh"       # "svd" | "gram_eigh" | "newton_schulz"
     mode1_reuse: bool = True            # beyond-paper: reuse X_k V from step 1
     nnls_sweeps: int = 5
+    # inner AO-ADMM iterations per factor update (admm-routed constraints;
+    # warm-started duals make a handful sufficient — COPA §3)
+    admm_iters: int = 10
     dtype: Any = jnp.float32
     # MTTKRP compute backend: "jnp" (pure-jnp spartan math, exact reference),
     # "pallas" (TPU kernels; interpret-mode emulation off-TPU), or "auto"
@@ -77,13 +98,55 @@ class Parafac2Options:
     # check evaluated on device (exact host stopping semantics).
     check_every: int = 10
 
+    def __post_init__(self):
+        if self.constraints is not None:
+            if self.nonneg is not None:
+                raise ValueError(
+                    "pass either constraints= or the deprecated nonneg= "
+                    "flag, not both")
+            # normalize to a hashable, canonically ordered tuple of pairs
+            object.__setattr__(
+                self, "constraints", tuple(sorted(dict(self.constraints).items())))
+
+    def constraint_specs(self) -> Dict[str, str]:
+        """Resolved per-mode constraint specs (the deprecation shim lives
+        here: a legacy ``nonneg`` bool maps onto the equivalent specs)."""
+        if self.constraints is not None:
+            return dict(self.constraints)
+        if self.nonneg is not None:
+            warnings.warn(
+                "Parafac2Options(nonneg=...) is deprecated; use "
+                "constraints={'v': 'nonneg', 'w': 'nonneg'} (or 'none') "
+                "instead", DeprecationWarning, stacklevel=3)
+        nn = True if self.nonneg is None else self.nonneg
+        spec = "nonneg" if nn else "none"
+        return {"v": spec, "w": spec}
+
+
+def constraints_for(opts: Parafac2Options) -> Dict[str, cst.Constraint]:
+    """Parsed per-mode :class:`repro.core.constraints.Constraint` bundle for
+    ``opts`` (parse results are cached on the spec strings), with the
+    layout/constraint compatibility checks applied."""
+    cons = cst.bundle(opts.constraint_specs())
+    if opts.w_layout == "bucketed" and cons["w"].smooth_lam:
+        raise ValueError(
+            "constraint 'smooth' on mode 'w' couples W rows across subjects "
+            "and needs w_layout='global' (the bucketed layout splits rows "
+            "across data shards)")
+    return cons
+
 
 def init_state(data: Bucketed, opts: Parafac2Options, seed: int = 0) -> Parafac2State:
-    """H = I, V random (nonneg if constrained), W = 1 — Kiers-style init."""
+    """H = I, V random (nonneg if constrained), W = 1 — Kiers-style init.
+
+    ADMM-routed constraints get their ``(Z, U)`` dual state initialized here
+    so the carried ``aux`` pytree has a static structure for the engines.
+    """
     R = opts.rank
+    cons = constraints_for(opts)
     key = jax.random.PRNGKey(seed)
     H = jnp.eye(R, dtype=opts.dtype)
-    if opts.nonneg:
+    if cons["v"].nonneg:
         V = jax.random.uniform(key, (data.n_cols, R), opts.dtype)
     else:
         V = jax.random.normal(key, (data.n_cols, R), opts.dtype)
@@ -92,7 +155,15 @@ def init_state(data: Bucketed, opts: Parafac2Options, seed: int = 0) -> Parafac2
                   for b in data.buckets)
     else:
         W = jnp.ones((data.n_subjects, R), opts.dtype)
-    return Parafac2State(H=H, V=V, W=W, fit=jnp.asarray(-jnp.inf, opts.dtype))
+    if isinstance(W, tuple):
+        # per-bucket aux (a LIST, so pytree structure distinguishes it from
+        # the global layout's single (Z, U) pair)
+        aux_w = [cons["w"].init_aux(wb) for wb in W] if cons["w"].admm else ()
+    else:
+        aux_w = cons["w"].init_aux(W)
+    aux = {"h": cons["h"].init_aux(H), "v": cons["v"].init_aux(V), "w": aux_w}
+    return Parafac2State(H=H, V=V, W=W, fit=jnp.asarray(-jnp.inf, opts.dtype),
+                         aux=aux)
 
 
 def _w_rows(W, b: Bucket, i: int):
@@ -143,10 +214,18 @@ def als_step(
     state: Parafac2State,
     opts: Parafac2Options,
 ) -> Parafac2State:
-    """One full PARAFAC2-ALS iteration (jit-compatible)."""
+    """One full PARAFAC2-ALS iteration (jit-compatible).
+
+    Every factor update routes through the per-mode constraint bundle
+    (:func:`constraints_for`); ADMM-routed constraints read and write their
+    dual state in ``state.aux`` — the engines carry it like any other leaf.
+    """
     H, V, W = state.H, state.V, state.W
     R, J, K = opts.rank, data.n_cols, data.n_subjects
     be = get_backend(opts.backend)
+    cons = constraints_for(opts)
+    solve_kw = dict(nnls_sweeps=opts.nnls_sweeps, admm_iters=opts.admm_iters)
+    aux = state.aux if isinstance(state.aux, dict) else cst.empty_aux()
 
     bucketed = isinstance(W, tuple)
 
@@ -170,9 +249,16 @@ def als_step(
         else:
             M1 = M1 + be.mode1(Yc, b.gather_v(V), Wb, b.subject_mask)
     M1 = psum_subjects(M1)
-    H_new = factor_update(M1, _w_gram(W) * (V.T @ V), H, nonneg=False)
-    H_new, h_norms = normalize_columns(H_new)
-    W = scale_w(W, h_norms)         # absorb scale (model-invariant)
+    H_new, aux_h = cons["h"].update(M1, _w_gram(W) * (V.T @ V), H, aux["h"],
+                                    **solve_kw)
+    aux_w = aux["w"]
+    if not cons["h"].penalized:
+        # absorb scale into W (model-invariant for indicator constraints;
+        # penalized modes keep their natural scale — see Constraint.penalized)
+        H_new, h_norms = normalize_columns(H_new)
+        aux_h = cst.scale_aux(aux_h, 1.0 / jnp.maximum(h_norms, 1e-12))
+        W = scale_w(W, h_norms)
+        aux_w = cst.scale_aux(aux_w, h_norms)
 
     # ---- 3b: V update (mode-2 MTTKRP) --------------------------------------
     M2 = jnp.zeros((J, R), opts.dtype)
@@ -181,10 +267,13 @@ def als_step(
         A = be.mode2_compact(Yc, H_new, Wb, b.col_mask, b.subject_mask)
         M2 = M2 + be.mode2_scatter(A, b.cols, J).astype(M2.dtype)
     M2 = psum_subjects(M2)
-    V_new = factor_update(M2, _w_gram(W) * (H_new.T @ H_new), V, nonneg=opts.nonneg,
-                          nnls_sweeps=opts.nnls_sweeps)
-    V_new, v_norms = normalize_columns(V_new)
-    W = scale_w(W, v_norms)
+    V_new, aux_v = cons["v"].update(M2, _w_gram(W) * (H_new.T @ H_new), V,
+                                    aux["v"], **solve_kw)
+    if not cons["v"].penalized:
+        V_new, v_norms = normalize_columns(V_new)
+        aux_v = cst.scale_aux(aux_v, 1.0 / jnp.maximum(v_norms, 1e-12))
+        W = scale_w(W, v_norms)
+        aux_w = cst.scale_aux(aux_w, v_norms)
 
     # ---- 3c: W update (mode-3 MTTKRP) --------------------------------------
     VtV = V_new.T @ V_new
@@ -197,18 +286,22 @@ def als_step(
         rows_per_bucket.append(
             be.mode3(Yc, None, H_new, b.subject_mask, YkV=G))
     if bucketed:
-        # per-bucket W rows update in place — no K-wide scatter, no gathers
-        W_new = tuple(
-            factor_update(rows.astype(wb.dtype), gram3, wb, nonneg=opts.nonneg,
-                          nnls_sweeps=opts.nnls_sweeps) * b.subject_mask[:, None]
-            for rows, wb, b in zip(rows_per_bucket, W, data.buckets))
+        # per-bucket W rows update in place — no K-wide scatter, no gathers;
+        # per-bucket aux rides in a list aligned with the buckets
+        aux_w_list = (aux_w if isinstance(aux_w, list)
+                      else [() for _ in data.buckets])
+        upd = [cons["w"].update(rows.astype(wb.dtype), gram3, wb, awb,
+                                **solve_kw)
+               for rows, wb, awb in zip(rows_per_bucket, W, aux_w_list)]
+        W_new = tuple(wn * b.subject_mask[:, None]
+                      for (wn, _), b in zip(upd, data.buckets))
+        aux_w = [a for _, a in upd] if cons["w"].admm else ()
     else:
         M3 = jnp.zeros((K, R), opts.dtype)
         for b, rows in zip(data.buckets, rows_per_bucket):
             M3 = M3.at[b.subject_ids].add(rows.astype(M3.dtype))
         M3 = psum_subjects(M3)
-        W_new = factor_update(M3, gram3, W, nonneg=opts.nonneg,
-                              nnls_sweeps=opts.nnls_sweeps)
+        W_new, aux_w = cons["w"].update(M3, gram3, W, aux_w, **solve_kw)
 
     # ---- 4: fit ------------------------------------------------------------
     # ||X_k - Q_k H S_k V^T||^2 = ||X||^2 - 2 tr(S H^T G_k) + tr(S Φ S V^T V),
@@ -225,7 +318,8 @@ def als_step(
     fit_val = 1.0 - jnp.sqrt(jnp.maximum(resid, 0.0)) / jnp.sqrt(
         jnp.asarray(data.norm_sq, opts.dtype))
 
-    return Parafac2State(H=H_new, V=V_new, W=W_new, fit=fit_val)
+    return Parafac2State(H=H_new, V=V_new, W=W_new, fit=fit_val,
+                         aux={"h": aux_h, "v": aux_v, "w": aux_w})
 
 
 def fit(

@@ -1,11 +1,15 @@
 """PARAFAC2 decomposition driver — the paper's workload as a first-class job.
 
   PYTHONPATH=src python -m repro.launch.decompose --dataset choa --scale 0.002 \
-      --rank 5 --iters 20 --engine scan --json out.json
+      --rank 5 --iters 20 --engine scan --json out.json \
+      --constraint v=nonneg+l1:0.1,w=smooth:0.1
 
 ``--engine`` picks the ALS execution engine (host | scan | mesh — see
-repro.core.engine); ``--json`` writes the machine-readable run summary CI and
-the benchmarks consume.
+repro.core.engine); ``--constraint`` the per-mode factor constraints
+(COPA-style AO-ADMM layer — see repro.core.constraints; a bare spec such as
+``--constraint nonneg_admm`` applies to both V and W); ``--json`` writes the
+machine-readable run summary CI and the benchmarks consume, including the
+resolved constraint block.
 """
 from __future__ import annotations
 
@@ -18,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ENGINES, Parafac2Options, bucketize, fit
+from repro.core.constraints import (
+    available as available_constraints, constraint_summary, parse_constraint_arg)
 from repro.core.interpret import subject_top_phenotypes, top_phenotype_features
 from repro.data import choa_like, movielens_like
 from repro.sparse import random_irregular
@@ -42,7 +48,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--rank", type=int, default=5)
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--nonneg", action=argparse.BooleanOptionalAction, default=True,
-                    help="nonnegativity on V/W (disable with --no-nonneg)")
+                    help="DEPRECATED (use --constraint): nonnegativity on V/W "
+                         "(disable with --no-nonneg)")
+    ap.add_argument("--constraint", default="", metavar="SPECS",
+                    help="per-mode factor constraints, e.g. "
+                         "'v=nonneg+l1:0.1,w=smooth:0.1' (modes h/v/w; a bare "
+                         "spec applies to v and w; registered: "
+                         f"{', '.join(available_constraints())} — see "
+                         "repro.core.constraints). Overrides --nonneg.")
     ap.add_argument("--backend", default="auto", choices=["jnp", "pallas", "auto"],
                     help="MTTKRP compute backend for the ALS hot loop "
                          "(see repro.core.backend)")
@@ -61,6 +74,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.constraint:
+        # raises ValueError listing the registered constraints on a bad spec
+        specs = parse_constraint_arg(args.constraint)
+    else:
+        nn = "nonneg" if args.nonneg else "none"
+        specs = {"v": nn, "w": nn}
+    print(f"[constraints] {constraint_summary(specs)}")
+
     t0 = time.perf_counter()
     data = load_dataset(args.dataset, args.scale, args.seed)
     print(f"[data] K={data.n_subjects} J={data.n_cols} nnz={data.nnz} "
@@ -75,7 +96,7 @@ def main(argv=None) -> dict:
     print(f"[bucketize] {len(bt.buckets)} buckets; padded-cell occupancy "
           f"{(1-waste)*100:.1f}% nnz")
 
-    opts = Parafac2Options(rank=args.rank, nonneg=args.nonneg, backend=args.backend,
+    opts = Parafac2Options(rank=args.rank, constraints=specs, backend=args.backend,
                            engine=args.engine, check_every=args.check_every)
     t0 = time.perf_counter()
     state, hist = fit(bt, opts, max_iters=args.iters, tol=args.tol,
@@ -88,10 +109,15 @@ def main(argv=None) -> dict:
     for r, feats in enumerate(phen):
         print(f"phenotype {r}: " + ", ".join(f"{n}({w:.2f})" for n, w in feats[:5]))
     print("subject 0 top phenotypes:", subject_top_phenotypes(np.asarray(state.W), 0))
+    V_np = np.asarray(state.V)
     summary = {
         "dataset": args.dataset, "scale": args.scale, "rank": args.rank,
         "engine": args.engine, "backend": args.backend, "tol": args.tol,
         "check_every": args.check_every, "seed": args.seed,
+        # resolved (canonicalized) per-mode constraint specs + the V sparsity
+        # they induced — the l1 knob's observable effect
+        "constraints": constraint_summary(specs),
+        "v_zero_fraction": float((V_np == 0.0).mean()),
         "n_subjects": data.n_subjects, "n_cols": data.n_cols, "nnz": data.nnz,
         "fit": float(hist[-1]), "fit_history": [float(f) for f in hist],
         "iters": len(hist), "seconds_total": dt,

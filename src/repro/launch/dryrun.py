@@ -252,9 +252,14 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh, mesh_name: str,
 # PARAFAC2 cells (the paper's workload on the production mesh)
 # ---------------------------------------------------------------------------
 
-def parafac2_specs(K: int, J: int, R: int, geometry, dp: int):
+def parafac2_specs(K: int, J: int, R: int, geometry, dp: int,
+                   opts: Optional[Parafac2Options] = None):
     """ShapeDtypeStruct Bucketed + state for a dataset geometry
-    [(Kb, I_pad, C_pad)...]; Kb rounded up to the DP shard count."""
+    [(Kb, I_pad, C_pad)...]; Kb rounded up to the DP shard count. ADMM-routed
+    constraints in ``opts`` add their carried ``(Z, U)`` dual pairs to the
+    state's aux pytree (bucketed-W aux follows the bucket shapes)."""
+    from repro.core.parafac2 import constraints_for
+
     f32 = jnp.float32
     i32 = jnp.int32
     sds = jax.ShapeDtypeStruct
@@ -272,10 +277,20 @@ def parafac2_specs(K: int, J: int, R: int, geometry, dp: int):
             row_counts=sds((kb,), i32),
         ))
     data = Bucketed(buckets=buckets, n_subjects=K, n_cols=J, norm_sq=1.0)
+    cons = constraints_for(opts) if opts is not None else None
+
+    def aux_for(mode, shape):
+        if cons is None or not cons[mode].admm:
+            return ()
+        return (sds(shape, f32), sds(shape, f32))    # (Z, U) dual pair
+
+    aux = {"h": aux_for("h", (R, R)), "v": aux_for("v", (J, R)),
+           "w": ([aux_for("w", (b.vals.shape[0], R)) for b in buckets]
+                 if cons is not None and cons["w"].admm else ())}
     state = Parafac2State(
         H=sds((R, R), f32), V=sds((J, R), f32),
         W=tuple(sds((b.vals.shape[0], R), f32) for b in buckets),  # bucketed W
-        fit=sds((), f32))
+        fit=sds((), f32), aux=aux)
     return data, state
 
 
@@ -291,11 +306,19 @@ def parafac2_shardings(data: Bucketed, state, mesh: Mesh, *, wide: bool = True):
             row_counts=kb)
     d_sh = Bucketed(buckets=[b_shard(b) for b in data.buckets],
                     n_subjects=data.n_subjects, n_cols=data.n_cols, norm_sq=1.0)
+    rep = NamedSharding(mesh, P())
+    subj = NamedSharding(mesh, P(axes))
+    # ADMM aux shardings follow the owning factor: bucketed-W duals split
+    # over the subject axes, H/V duals replicate
+    aux_sh = {k: jax.tree_util.tree_map(lambda _: subj if k == "w" else rep,
+                                        sub)
+              for k, sub in state.aux.items()} if isinstance(state.aux, dict) \
+        else jax.tree_util.tree_map(lambda _: rep, state.aux)
     s_sh = Parafac2State(
-        H=NamedSharding(mesh, P()),
-        V=NamedSharding(mesh, P()),        # replicated-V mode (J moderate)
-        W=tuple(NamedSharding(mesh, P(axes)) for _ in data.buckets),
-        fit=NamedSharding(mesh, P()))
+        H=rep,
+        V=rep,                             # replicated-V mode (J moderate)
+        W=tuple(subj for _ in data.buckets),
+        fit=rep, aux=aux_sh)
     return d_sh, s_sh
 
 
@@ -312,25 +335,32 @@ PARAFAC2_CELLS = {
 
 def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
                       backend: str = "jnp", engine: str = "host",
-                      check_every: int = 8):
+                      check_every: int = 8, constraint: str = ""):
     """Lower + compile one PARAFAC2 cell. ``engine`` selects what one
     dispatch is: a single als_step ("host" — today's per-iteration loop), a
     check_every-iteration lax.scan chunk under GSPMD ("scan"), or the same
     chunk wrapped in shard_map over the subjects axes ("mesh") — see
-    repro.core.engine."""
+    repro.core.engine. ``constraint`` is the driver spec syntax
+    ("v=nonneg_admm,w=nonneg_admm"); ADMM specs put the carried dual pytree
+    into the lowered state so the production program shape includes the
+    AO-ADMM solver state."""
     from repro.core import engine as als_engine
+    from repro.core.constraints import parse_constraint_arg
 
     K, J, R, geom = PARAFAC2_CELLS[name]
     n_chips = int(np.prod(mesh.devices.shape))
     rec = {"arch": name, "shape": "als_step", "mesh": mesh_name,
            "kind": "parafac2", "n_chips": n_chips, "params": 0,
            "active_params": 0, "backend": backend, "engine": engine}
-    opts = Parafac2Options(rank=R, nonneg=True, w_layout="bucketed",
+    specs = (parse_constraint_arg(constraint) if constraint
+             else {"v": "nonneg", "w": "nonneg"})
+    rec["constraints"] = {m: s for m, s in specs.items()}
+    opts = Parafac2Options(rank=R, constraints=specs, w_layout="bucketed",
                            backend=backend, engine=engine,
                            check_every=check_every)
     wide = rec.get("wide", True)
     dp = _axis_size(mesh, tuple(mesh.axis_names) if wide else ("pod", "data"))
-    data, state = parafac2_specs(K, J, R, geom, dp)
+    data, state = parafac2_specs(K, J, R, geom, dp, opts)
     d_sh, s_sh = parafac2_shardings(data, state, mesh, wide=wide)
     t0 = time.perf_counter()
     with axis_rules(LM_RULES, mesh), mesh:
@@ -413,6 +443,11 @@ def main(argv=None):
                          "one lowered dispatch is (see repro.core.engine)")
     ap.add_argument("--check-every", type=int, default=8,
                     help="scan-chunk length for --engine scan/mesh")
+    ap.add_argument("--constraint", default="",
+                    help="constraint spec for the PARAFAC2 cells "
+                         "(driver syntax, e.g. 'v=nonneg_admm,w=nonneg_admm'); "
+                         "empty = legacy nonneg. The sweep ALWAYS additionally "
+                         "lowers one AO-ADMM-constrained cell per mesh.")
     ap.add_argument("--sp", action="store_true", help="sequence-parallel residual stream (hillclimb)")
     ap.add_argument("--remat-policy", default="", help="override cfg.remat_policy (hillclimb)")
     ap.add_argument("--microbatches", type=int, default=1, help="gradient accumulation (train cells)")
@@ -464,10 +499,19 @@ def main(argv=None):
                     if not args.quiet:
                         traceback.print_exc()
         if args.parafac2:
-            for cell in PARAFAC2_CELLS:
+            # every cell with the requested constraint, plus at least one
+            # AO-ADMM-constrained cell per mesh (the carried dual state must
+            # lower + compile on the production meshes, not just on CPU)
+            admm_spec = "v=nonneg_admm,w=nonneg_admm"
+            cells = [(cell, args.constraint, "") for cell in PARAFAC2_CELLS]
+            if args.constraint != admm_spec:
+                cells.append((next(iter(PARAFAC2_CELLS)), admm_spec, "+admm"))
+            for cell, cons, tag in cells:
                 key = (f"{cell}|als_step|{mesh_name}"
                        + (f"+{args.backend}" if args.backend != "jnp" else "")
-                       + (f"+{args.engine}" if args.engine != "host" else ""))
+                       + (f"+{args.engine}" if args.engine != "host" else "")
+                       + (f"+[{cons}]" if cons else "")
+                       + tag)
                 if key in results and not args.force:
                     continue
                 print(f"[dryrun] {key} ...", flush=True)
@@ -475,7 +519,8 @@ def main(argv=None):
                     rec = run_parafac2_cell(cell, mesh, mesh_name,
                                             backend=args.backend,
                                             engine=args.engine,
-                                            check_every=args.check_every)
+                                            check_every=args.check_every,
+                                            constraint=cons)
                     results[key] = rec
                     save_results(args.out, results)
                     print(f"[dryrun] {key}: OK bottleneck={rec['bottleneck']} "

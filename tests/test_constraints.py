@@ -1,0 +1,409 @@
+"""Constraint-layer suite: spec parsing/registry, prox operators, AO-ADMM vs
+HALS agreement, l1 sparsity / smooth TV behaviour, engine parity with ADMM
+aux state in the carry, and the legacy ``nonneg`` deprecation shim."""
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import bucketize, Parafac2Options, als_step, fit, init_state
+from repro.core import constraints as cst
+from repro.core.nnls import hals_nnls
+from repro.core.parafac2 import constraints_for
+from repro.data import choa_like
+from repro.sparse import random_parafac2
+
+f64 = jnp.float64
+
+
+@pytest.fixture(scope="module")
+def choa_bt():
+    data = choa_like(scale=5e-5, seed=0)
+    return bucketize(data, max_buckets=2, dtype=f64)
+
+
+@pytest.fixture(scope="module")
+def exact_bt():
+    data, _ = random_parafac2(n_subjects=20, n_cols=30, max_rows=25, rank=4,
+                              density=1.0, seed=1)
+    return bucketize(data, max_buckets=2, dtype=f64)
+
+
+# ---------------------------------------------------------------------------
+# spec parsing + registry
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_canonicalizes():
+    c = cst.parse_spec("nonneg + l1")
+    assert c.spec == "nonneg+l1:0.1"          # default lam filled in
+    assert c.solver == "admm" and c.nonneg
+    assert cst.parse_spec("l1:0.25").terms == (("l1", 0.25),)
+    assert cst.parse_spec("none").solver == "ridge"
+    assert cst.parse_spec("nonneg").solver == "hals"
+    assert cst.parse_spec("nonneg_admm").solver == "admm"
+    assert cst.parse_spec("").spec == "none"
+
+
+def test_parse_spec_unknown_lists_registered():
+    with pytest.raises(ValueError, match="registered constraints"):
+        cst.parse_spec("bogus")
+    with pytest.raises(ValueError) as ei:
+        cst.parse_spec("nonneg+bogus:3")
+    for name in cst.available():
+        assert name in str(ei.value)
+
+
+def test_parse_spec_rejects_bad_compositions():
+    with pytest.raises(ValueError, match="smooth"):
+        cst.parse_spec("smooth+nonneg")
+    with pytest.raises(ValueError, match="strength"):
+        cst.parse_spec("l1:abc")
+    with pytest.raises(ValueError, match="negative"):
+        cst.parse_spec("l1:-1")
+    # indicator terms have no strength knob: 'nonneg:1' would otherwise
+    # silently flip the penalized flag without applying any penalty
+    with pytest.raises(ValueError, match="indicator"):
+        cst.parse_spec("nonneg:1")
+    with pytest.raises(ValueError, match="indicator"):
+        cst.parse_spec("none:5")
+
+
+def test_penalized_flag_only_for_penalty_terms():
+    assert not cst.parse_spec("nonneg").penalized
+    assert not cst.parse_spec("nonneg_admm").penalized
+    assert cst.parse_spec("l1:0.1").penalized
+    assert cst.parse_spec("smooth:0.1").penalized
+    assert cst.parse_spec("nonneg+l1:0.1").penalized
+    assert not cst.parse_spec("l1:0").penalized   # zero-strength == indicator
+
+
+def test_parse_constraint_arg_modes_and_bare_spec():
+    d = cst.parse_constraint_arg("v=nonneg+l1:0.1,w=smooth:0.5")
+    assert d == {"v": "nonneg+l1:0.1", "w": "smooth:0.5"}
+    # bare spec applies to V and W
+    assert cst.parse_constraint_arg("nonneg_admm") == {
+        "v": "nonneg_admm", "w": "nonneg_admm"}
+    with pytest.raises(ValueError, match="mode"):
+        cst.parse_constraint_arg("q=nonneg")
+    with pytest.raises(ValueError, match="registered constraints"):
+        cst.parse_constraint_arg("v=typo")
+
+
+def test_register_custom_term():
+    cst.register_term("clip2", cst.TermDef(
+        kind="custom", solver="admm",
+        prox=lambda Y, rho, lam: jnp.clip(Y, 0.0, 2.0), nonneg=True))
+    try:
+        c = cst.parse_spec("clip2")
+        Z = c.prox(jnp.asarray([[-1.0, 5.0]]), 1.0)
+        np.testing.assert_allclose(np.asarray(Z), [[0.0, 2.0]])
+        with pytest.raises(ValueError, match="compose"):
+            cst.parse_spec("clip2+l1")
+    finally:
+        cst._REGISTRY.pop("clip2", None)
+        cst.parse_spec.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# prox operators
+# ---------------------------------------------------------------------------
+
+def test_prox_l1_soft_threshold():
+    Y = jnp.asarray([-2.0, -0.05, 0.0, 0.05, 2.0], f64)
+    Z = np.asarray(cst.prox_l1(Y, 0.1))
+    np.testing.assert_allclose(Z, [-1.9, 0.0, 0.0, 0.0, 1.9], atol=1e-12)
+
+
+def test_prox_nonneg_l1_shrink_then_clip():
+    Y = jnp.asarray([-2.0, 0.05, 2.0], f64)
+    np.testing.assert_allclose(
+        np.asarray(cst.prox_nonneg_l1(Y, 0.1)), [0.0, 0.0, 1.9], atol=1e-12)
+
+
+def test_prox_smooth_optimality():
+    """Z = prox_smooth(Y) satisfies (rho I + 2 lam D^T D) Z = rho Y."""
+    rng = np.random.default_rng(0)
+    K, R, rho, lam = 9, 3, 0.7, 0.4
+    Y = jnp.asarray(rng.standard_normal((K, R)))
+    Z = np.asarray(cst.prox_smooth(Y, rho, lam))
+    D = np.zeros((K - 1, K))
+    D[np.arange(K - 1), np.arange(K - 1)] = -1.0
+    D[np.arange(K - 1), np.arange(1, K)] = 1.0
+    lhs = rho * Z + 2.0 * lam * (D.T @ D) @ Z
+    np.testing.assert_allclose(lhs, rho * np.asarray(Y), atol=1e-10)
+    # K=1: no differences to penalize — identity
+    y1 = jnp.ones((1, 4), f64)
+    np.testing.assert_array_equal(np.asarray(cst.prox_smooth(y1, 1.0, 5.0)),
+                                  np.asarray(y1))
+
+
+# ---------------------------------------------------------------------------
+# hals_nnls vs a brute-force projected-gradient reference (satellite)
+# ---------------------------------------------------------------------------
+
+def _nnls_reference(M, A, iters=20000):
+    """Projected gradient on  min_{X>=0} 0.5 tr(X A X^T) - tr(X M^T)."""
+    X = np.maximum(M @ np.linalg.inv(A), 0.0)
+    eta = 1.0 / np.linalg.norm(A, 2)
+    for _ in range(iters):
+        X = np.maximum(X - eta * (X @ A - M), 0.0)
+    return X
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_hals_nnls_matches_projected_gradient(seed):
+    rng = np.random.default_rng(seed)
+    N, R = 30, 5
+    G = rng.random((50, R)) + 0.1          # well-conditioned Gram
+    A = G.T @ G
+    T = rng.standard_normal((N, 50))
+    M = T @ G
+    ref = _nnls_reference(M, A)
+    out = np.asarray(hals_nnls(jnp.asarray(M), jnp.asarray(A),
+                               jnp.asarray(np.abs(rng.standard_normal((N, R)))),
+                               sweeps=400))
+    np.testing.assert_allclose(out, ref, atol=1e-6)
+    assert (out >= 0).all()
+
+
+def test_hals_nnls_eps_diag_guard():
+    """A zero column in the Gram (dead factor) must not produce NaN/inf: the
+    eps clamp on diag(A) keeps the division finite and the column at 0."""
+    rng = np.random.default_rng(3)
+    R = 4
+    G = rng.random((20, R))
+    G[:, 2] = 0.0                          # dead factor -> A[2,2] == 0
+    A = jnp.asarray(G.T @ G, f64)
+    M = jnp.asarray(rng.standard_normal((10, 20)) @ G, f64)
+    X = np.asarray(hals_nnls(M, A, jnp.ones((10, R), f64), sweeps=10))
+    assert np.isfinite(X).all()
+    np.testing.assert_array_equal(X[:, 2], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# AO-ADMM solver
+# ---------------------------------------------------------------------------
+
+def test_admm_nonneg_agrees_with_hals_1e6_f64():
+    """Same strictly convex NNLS problem, two solvers, one minimizer: the
+    warm-started ADMM route must land on the HALS solution to 1e-6."""
+    rng = np.random.default_rng(7)
+    N, R = 40, 5
+    G = rng.random((60, R)) + 0.1
+    A = jnp.asarray(G.T @ G, f64)
+    M = jnp.asarray(rng.standard_normal((N, 60)) @ G, f64)
+    X0 = jnp.asarray(np.abs(rng.standard_normal((N, R))), f64)
+    x_hals = np.asarray(hals_nnls(M, A, X0, sweeps=500))
+    c = cst.parse_spec("nonneg_admm")
+    x_admm, aux = c.update(M, A, X0, (), admm_iters=50)
+    for _ in range(20):                     # warm-started outer refreshes
+        x_admm, aux = c.update(M, A, x_admm, aux, admm_iters=50)
+    np.testing.assert_allclose(np.asarray(x_admm), x_hals, atol=1e-6)
+
+
+def test_admm_l1_sparsifies_vs_lam():
+    """Standalone l1 solve: zero fraction is monotone in lambda."""
+    rng = np.random.default_rng(11)
+    R = 5
+    G = rng.random((60, R)) + 0.1
+    A = jnp.asarray(G.T @ G, f64)
+    M = jnp.asarray(rng.standard_normal((30, 60)) @ G, f64)
+    zero_fracs = []
+    for lam in (0.0, 1.0, 10.0, 100.0):
+        c = cst.parse_spec(f"l1:{lam}")
+        X, aux = c.update(M, A, jnp.zeros((30, R), f64), (), admm_iters=200)
+        zero_fracs.append(float((np.asarray(X) == 0.0).mean()))
+    assert zero_fracs == sorted(zero_fracs), zero_fracs
+    assert zero_fracs[-1] > zero_fracs[0]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end fits
+# ---------------------------------------------------------------------------
+
+def test_fit_nonneg_admm_close_to_hals(exact_bt):
+    kw = dict(rank=4, dtype=f64)
+    _, hh = fit(exact_bt, Parafac2Options(
+        constraints={"v": "nonneg", "w": "nonneg"}, **kw), max_iters=40, tol=0.0)
+    st, ha = fit(exact_bt, Parafac2Options(
+        constraints={"v": "nonneg_admm", "w": "nonneg_admm"}, admm_iters=20,
+        **kw), max_iters=40, tol=0.0)
+    assert abs(ha[-1] - hh[-1]) < 1e-2      # same model, same quality
+    assert (np.asarray(st.V) >= 0).all() and (np.asarray(st.W) >= 0).all()
+    # the ADMM duals rode in the state and are structurally live
+    assert st.aux["v"] != () and st.aux["w"] != ()
+
+
+def test_fit_l1_drives_v_sparsity_monotone(exact_bt):
+    fracs = []
+    for lam in (0.0, 1.0, 5.0, 20.0):
+        spec = "nonneg" if lam == 0.0 else f"nonneg+l1:{lam}"
+        st, _ = fit(exact_bt, Parafac2Options(
+            rank=4, constraints={"v": spec, "w": "nonneg"}, dtype=f64),
+            max_iters=30, tol=0.0)
+        fracs.append(float((np.asarray(st.V) == 0.0).mean()))
+    assert fracs == sorted(fracs), fracs
+    assert fracs[-1] > fracs[0] + 0.3, fracs
+
+
+def _total_variation(W):
+    return float(np.abs(np.diff(np.asarray(W), axis=0)).sum())
+
+
+def test_fit_smooth_reduces_w_total_variation(choa_bt):
+    kw = dict(rank=3, dtype=f64)
+    st0, _ = fit(choa_bt, Parafac2Options(
+        constraints={"v": "nonneg", "w": "none"}, **kw), max_iters=20, tol=0.0)
+    st1, _ = fit(choa_bt, Parafac2Options(
+        constraints={"v": "nonneg", "w": "smooth:1.0"}, **kw),
+        max_iters=20, tol=0.0)
+    assert _total_variation(st1.W) < _total_variation(st0.W)
+
+
+def test_smooth_needs_global_w_layout(choa_bt):
+    opts = Parafac2Options(rank=3, constraints={"w": "smooth:0.1"},
+                           w_layout="bucketed")
+    with pytest.raises(ValueError, match="w_layout"):
+        init_state(choa_bt, opts, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# engine parity with ADMM aux state in the carry
+# ---------------------------------------------------------------------------
+
+ADMM_SPECS = {"v": "nonneg_admm", "w": "nonneg_admm"}
+
+
+def _traj(bt, engine, specs, *, check_every=4, iters=10, w_layout="global"):
+    opts = Parafac2Options(rank=3, constraints=specs, dtype=f64,
+                           engine=engine, check_every=check_every,
+                           w_layout=w_layout)
+    state, hist = fit(bt, opts, max_iters=iters, tol=0.0, seed=0)
+    return state, np.asarray(hist)
+
+
+def test_admm_scan_matches_host_bitwise(choa_bt):
+    _, hh = _traj(choa_bt, "host", ADMM_SPECS)
+    _, hs = _traj(choa_bt, "scan", ADMM_SPECS, check_every=4)
+    np.testing.assert_allclose(hs, hh, rtol=0, atol=1e-12)
+
+
+def test_admm_while_matches_host_bitwise(choa_bt):
+    _, hh = _traj(choa_bt, "host", ADMM_SPECS)
+    _, hw = _traj(choa_bt, "scan", ADMM_SPECS, check_every=0)
+    np.testing.assert_allclose(hw, hh, rtol=0, atol=1e-12)
+
+
+def test_admm_mesh_matches_host(choa_bt):
+    _, hh = _traj(choa_bt, "host", ADMM_SPECS)
+    _, hm = _traj(choa_bt, "mesh", ADMM_SPECS, check_every=4)
+    np.testing.assert_allclose(hm, hh, rtol=0, atol=1e-8)
+
+
+def test_admm_mesh_bucketed_w_aux_sharded(choa_bt):
+    """Bucketed-W ADMM: per-bucket dual state rides the subject shards."""
+    sh, hh = _traj(choa_bt, "host", ADMM_SPECS, w_layout="bucketed")
+    sm, hm = _traj(choa_bt, "mesh", ADMM_SPECS, check_every=4,
+                   w_layout="bucketed")
+    np.testing.assert_allclose(hm, hh, rtol=0, atol=1e-8)
+    assert isinstance(sm.aux["w"], list) and len(sm.aux["w"]) == 2
+
+
+def test_smooth_engine_parity(choa_bt):
+    specs = {"v": "nonneg", "w": "smooth:0.2"}
+    _, hh = _traj(choa_bt, "host", specs)
+    _, hs = _traj(choa_bt, "scan", specs, check_every=4)
+    _, hm = _traj(choa_bt, "mesh", specs, check_every=4)
+    np.testing.assert_allclose(hs, hh, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(hm, hh, rtol=0, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# legacy nonneg flag: deprecation shim + default-path equivalence
+# ---------------------------------------------------------------------------
+
+def test_legacy_nonneg_flag_bitwise_equals_constraints(choa_bt):
+    """The deprecated bool and its constraint-spec translation must walk the
+    SAME trajectory bitwise — the acceptance bar for the refactor."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = Parafac2Options(rank=3, nonneg=True, dtype=f64)
+    new = Parafac2Options(rank=3, constraints={"v": "nonneg", "w": "nonneg"},
+                          dtype=f64)
+    default = Parafac2Options(rank=3, dtype=f64)      # unset -> paper default
+    _, hl = fit(choa_bt, legacy, max_iters=8, tol=0.0, seed=0)
+    _, hn = fit(choa_bt, new, max_iters=8, tol=0.0, seed=0)
+    _, hd = fit(choa_bt, default, max_iters=8, tol=0.0, seed=0)
+    np.testing.assert_allclose(np.asarray(hn), np.asarray(hl), rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(hd), np.asarray(hl), rtol=0, atol=0)
+
+
+def test_legacy_nonneg_flag_warns_and_conflicts():
+    with pytest.warns(DeprecationWarning, match="nonneg"):
+        Parafac2Options(rank=3, nonneg=False).constraint_specs()
+    with pytest.raises(ValueError, match="not both"):
+        Parafac2Options(rank=3, nonneg=True, constraints={"v": "none"})
+
+
+def test_default_path_aux_is_empty(choa_bt):
+    """constraints unset -> hals/ridge routes only: no aux leaves anywhere
+    (nothing extra in the engine carries)."""
+    opts = Parafac2Options(rank=3, dtype=f64)
+    s0 = init_state(choa_bt, opts, seed=0)
+    assert jax.tree_util.tree_leaves(s0.aux) == []
+    s1 = als_step(choa_bt, s0, opts)
+    assert jax.tree_util.tree_leaves(s1.aux) == []
+
+
+def test_constraints_for_validates_and_caches():
+    opts = Parafac2Options(rank=3, constraints={"v": "nonneg+l1:0.1"})
+    cons = constraints_for(opts)
+    assert set(cons) == {"h", "v", "w"}
+    assert cons["h"].solver == "ridge" and cons["w"].solver == "ridge"
+    assert cons["v"].admm and cons["v"].nonneg
+
+
+# ---------------------------------------------------------------------------
+# baseline parity under constraints (apples-to-apples comparisons)
+# ---------------------------------------------------------------------------
+
+def test_baseline_step_matches_spartan_step_under_admm(exact_bt):
+    from repro.core.baseline import baseline_als_step
+
+    opts = Parafac2Options(rank=4, constraints=ADMM_SPECS, dtype=f64)
+    s0 = init_state(exact_bt, opts, seed=0)
+    sa = als_step(exact_bt, s0, opts)
+    sb = baseline_als_step(exact_bt, s0, opts)
+    np.testing.assert_allclose(np.asarray(sa.H), np.asarray(sb.H), atol=1e-9)
+    np.testing.assert_allclose(np.asarray(sa.V), np.asarray(sb.V), atol=1e-9)
+    np.testing.assert_allclose(np.asarray(sa.W), np.asarray(sb.W), atol=1e-9)
+    for la, lb in zip(jax.tree_util.tree_leaves(sa.aux),
+                      jax.tree_util.tree_leaves(sb.aux)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# interpretation consults the fitted spec
+# ---------------------------------------------------------------------------
+
+def test_temporal_signature_consults_constraint_spec():
+    from repro.core.interpret import model_is_nonneg, temporal_signature
+
+    Uk = np.asarray([[1.0, -2.0], [-0.5, 3.0]])
+    nn_opts = Parafac2Options(rank=2, constraints={"v": "nonneg", "w": "nonneg"})
+    un_opts = Parafac2Options(rank=2, constraints={"v": "none", "w": "none"})
+    l1_opts = Parafac2Options(rank=2, constraints={"v": "l1:0.1", "w": "none"})
+    assert model_is_nonneg(nn_opts) and not model_is_nonneg(un_opts)
+    assert not model_is_nonneg(l1_opts)
+    # nonneg fit: clipped, as in the paper
+    clipped = temporal_signature(Uk, [0, 1], constraints=nn_opts)
+    assert (clipped[1] >= 0).all() and clipped[1][0] == 0.0
+    # unconstrained / l1-only fit: negative lobes preserved (no silent clip)
+    for o in (un_opts, l1_opts):
+        raw = temporal_signature(Uk, [0, 1], constraints=o)
+        np.testing.assert_array_equal(raw[1], Uk[:, 1])
+    # explicit override still wins
+    forced = temporal_signature(Uk, [1], clip_nonneg=True, constraints=un_opts)
+    assert (forced[1] >= 0).all()

@@ -63,6 +63,55 @@ def test_decompose_driver_engine_tol_json(tmp_path):
     assert blob["fit"] == pytest.approx(scan["fit"])
 
 
+def test_decompose_constraint_roundtrips_through_json(tmp_path):
+    """--constraint specs canonicalize into the --json summary's constraint
+    block, and the l1 knob's observable effect (V sparsity) is reported."""
+    import json
+
+    path = tmp_path / "out.json"
+    out = decompose_mod.main([
+        "--dataset", "synthetic", "--scale", "0.003", "--rank", "3",
+        "--iters", "6", "--constraint", "v=nonneg+l1:0.2,w=nonneg_admm",
+        "--json", str(path),
+    ])
+    blob = json.loads(path.read_text())
+    assert blob["constraints"] == {"h": "none", "v": "nonneg+l1:0.2",
+                                   "w": "nonneg_admm"}
+    assert blob["constraints"] == out["constraints"]
+    assert 0.0 <= blob["v_zero_fraction"] <= 1.0
+    assert np.isfinite(out["fit"])
+
+
+def test_decompose_bare_constraint_applies_to_v_and_w(tmp_path):
+    out = decompose_mod.main([
+        "--dataset", "synthetic", "--scale", "0.003", "--rank", "3",
+        "--iters", "4", "--constraint", "nonneg_admm",
+    ])
+    assert out["constraints"]["v"] == "nonneg_admm"
+    assert out["constraints"]["w"] == "nonneg_admm"
+
+
+def test_decompose_invalid_constraint_lists_registered():
+    """A bad spec fails fast with an error naming every registered
+    constraint (the user's discovery path)."""
+    from repro.core.constraints import available
+
+    with pytest.raises(ValueError) as ei:
+        decompose_mod.main([
+            "--dataset", "synthetic", "--scale", "0.003", "--rank", "3",
+            "--iters", "2", "--constraint", "v=bogus",
+        ])
+    msg = str(ei.value)
+    assert "registered constraints" in msg
+    for name in available():
+        assert name in msg
+    with pytest.raises(ValueError, match="mode"):
+        decompose_mod.main([
+            "--dataset", "synthetic", "--scale", "0.003", "--rank", "3",
+            "--iters", "2", "--constraint", "q=nonneg",
+        ])
+
+
 def test_sample_token_greedy_and_topk():
     rng = jax.random.PRNGKey(0)
     logits = jnp.asarray([[[0.1, 5.0, 0.2, 0.3]]], jnp.float32)

@@ -1,0 +1,121 @@
+"""Synthetic-EHR generator suite: the vectorized ``data/ehr.py::_build`` must
+be deterministic per seed and statistically indistinguishable (geometry-wise)
+from the original per-observation-loop generator it replaced."""
+import numpy as np
+import pytest
+
+from repro.data import choa_like, movielens_like
+from repro.data.ehr import _build
+from repro.sparse.coo import IrregularCOO, SubjectCOO
+
+
+def _build_reference(K, J, max_rows, mean_rows, feats_per_obs, seed,
+                     phenotypes=None):
+    """The pre-vectorization generator (per-observation Python loop), kept
+    verbatim as the distributional reference for the geometry-stats test."""
+    rng = np.random.default_rng(seed)
+    subs = []
+    R = 0 if phenotypes is None else phenotypes.shape[1]
+    if phenotypes is None:
+        pop = 1.0 / np.arange(1, J + 1) ** 0.8
+        pop /= pop.sum()
+    for k in range(K):
+        I_k = int(np.clip(rng.poisson(mean_rows) + 1, 1, max_rows))
+        rows, cols, vals = [], [], []
+        if phenotypes is None:
+            active = rng.choice(J, size=min(J, max(3, int(rng.poisson(feats_per_obs * 3)))),
+                                replace=False, p=pop)
+        else:
+            r_k = rng.integers(0, R)
+            w = phenotypes[:, r_k]
+            active = np.argsort(-w)[: max(3, feats_per_obs * 2)]
+        for i in range(I_k):
+            n = max(1, int(rng.poisson(feats_per_obs)))
+            picks = rng.choice(active, size=min(n, active.size), replace=False)
+            rows.extend([i] * picks.size)
+            cols.extend(picks.tolist())
+            vals.extend(rng.poisson(2.0, picks.size) + 1.0)
+        key = np.asarray(rows, np.int64) * J + np.asarray(cols, np.int64)
+        uk, inv = np.unique(key, return_inverse=True)
+        v = np.zeros(uk.size)
+        np.add.at(v, inv, np.asarray(vals, np.float64))
+        subs.append(SubjectCOO(
+            rows=(uk // J).astype(np.int32),
+            cols=(uk % J).astype(np.int32),
+            vals=v, n_rows=I_k, n_cols=J))
+    return IrregularCOO(subjects=subs, n_cols=J)
+
+
+def _geometry_stats(data):
+    rc = data.row_counts()
+    nnz = np.asarray([s.vals.size for s in data.subjects], np.float64)
+    vals = np.concatenate([s.vals for s in data.subjects])
+    distinct_cols = np.asarray(
+        [np.unique(s.cols).size for s in data.subjects], np.float64)
+    return {
+        "mean_rows": rc.mean(),
+        "mean_nnz": nnz.mean(),
+        "mean_val": vals.mean(),
+        "mean_distinct_cols": distinct_cols.mean(),
+        "nnz_per_row": (nnz / np.maximum(rc, 1)).mean(),
+    }
+
+
+GEOM = dict(K=400, J=300, max_rows=40, mean_rows=10, feats_per_obs=4)
+
+
+def test_vectorized_build_matches_reference_geometry_stats():
+    """Same seed-family, same distributions: every geometry statistic of the
+    batched generator lands within a few percent of the loop reference."""
+    new = _geometry_stats(_build(seed=0, **GEOM))
+    ref = _geometry_stats(_build_reference(seed=0, **GEOM))
+    for key in ref:
+        np.testing.assert_allclose(
+            new[key], ref[key], rtol=0.06,
+            err_msg=f"geometry stat {key!r} drifted: "
+                    f"vectorized={new[key]:.4g} reference={ref[key]:.4g}")
+
+
+def test_vectorized_build_matches_reference_with_phenotypes():
+    rng = np.random.default_rng(1)
+    phen = rng.random((GEOM["J"], 5)) ** 4
+    new = _geometry_stats(_build(seed=2, phenotypes=phen, **GEOM))
+    ref = _geometry_stats(_build_reference(seed=2, phenotypes=phen, **GEOM))
+    for key in ref:
+        np.testing.assert_allclose(new[key], ref[key], rtol=0.06,
+                                   err_msg=f"geometry stat {key!r} drifted")
+
+
+def test_build_deterministic_per_seed():
+    a = _build(seed=7, **GEOM)
+    b = _build(seed=7, **GEOM)
+    assert len(a.subjects) == len(b.subjects)
+    for sa, sb in zip(a.subjects, b.subjects):
+        np.testing.assert_array_equal(sa.rows, sb.rows)
+        np.testing.assert_array_equal(sa.cols, sb.cols)
+        np.testing.assert_array_equal(sa.vals, sb.vals)
+        assert sa.n_rows == sb.n_rows
+    c = _build(seed=8, **GEOM)
+    assert any(sa.vals.size != sc.vals.size or not np.array_equal(sa.vals, sc.vals)
+               for sa, sc in zip(a.subjects, c.subjects))
+
+
+def test_build_invariants():
+    data = _build(seed=3, **GEOM)
+    for s in data.subjects:
+        assert 1 <= s.n_rows <= GEOM["max_rows"]
+        assert s.rows.size > 0
+        assert (s.rows >= 0).all() and (s.rows < s.n_rows).all()
+        assert (s.cols >= 0).all() and (s.cols < GEOM["J"]).all()
+        assert (s.vals >= 1.0).all()       # poisson(2) + 1
+        # (row, col) pairs deduplicated and sorted by the unique() pass
+        key = s.rows.astype(np.int64) * GEOM["J"] + s.cols.astype(np.int64)
+        assert (np.diff(key) > 0).all()
+
+
+def test_public_generators_shapes():
+    d = choa_like(scale=5e-5, seed=0)
+    assert d.n_cols == 1_328 and d.n_subjects >= 8
+    m = movielens_like(scale=4e-4, seed=0)
+    assert m.n_cols == 26_096
+    assert max(s.n_rows for s in m.subjects) <= 19
