@@ -1,25 +1,36 @@
-"""End-to-end ALS benchmark: whole decompositions, engine × backend grid.
+"""End-to-end ALS benchmark: whole decompositions, engine × backend ×
+format grid.
 
 DPar2 (PAPERS.md) argues whole-decomposition time is the metric that matters —
 the MTTKRP micro benchmark (`mttkrp_micro.py`) cannot see the per-iteration
 host dispatch + `float(state.fit)` sync the host loop pays, which at small
 ranks IS the wall-clock floor. This benchmark times `iters` ALS iterations
 through each execution engine (host | scan | mesh — repro.core.engine),
-backend (jnp | pallas) and constraint route (none | nonneg | nonneg_admm |
+backend (jnp | pallas), device data format (cc | scoo | auto —
+repro.core.irregular; SCOO is the O(nnz) sparse path, and the low-density
+``synthsparse`` dataset is the regime where CC's densified rectangles burn
+~100x the FLOPs) and constraint route (none | nonneg | nonneg_admm |
 smooth — repro.core.constraints; COPA's claim is that AO-ADMM constraints
 ride the same MTTKRP core at negligible extra cost, and this axis measures
 exactly that) on geometry-preserving shrinks of the paper's datasets
 (`choa_like` / `movielens_like`), reporting steady-state seconds/iteration
-(compile excluded; the compiled callables are built once, then timed) plus a
-whole-run wall time.
+(compile excluded; the compiled callables are built once, then timed), a
+whole-run wall time, and ``peak_bytes`` — the compiled als_step's
+argument+temp device allocation, the metric where SCOO's win is
+density-proportional.
 
-  PYTHONPATH=src python -m benchmarks.als_e2e --datasets choa --scale 0.002 \
-      --rank 5 --iters 20 --engines host,scan \
-      --constraints nonneg,nonneg_admm --json BENCH_als.json
+  PYTHONPATH=src python -m benchmarks.als_e2e --datasets synthsparse \
+      --rank 5 --iters 20 --engines host,scan --formats cc,scoo \
+      --constraints nonneg --json BENCH_als.json
 
-Rows: ``als/<dataset>/<engine>/<backend>/<constraint>``. The JSON artifact is
-the CI perf trajectory (BENCH_als.json); `benchmarks/compare.py` gates it
-against the checked-in baseline.
+Rows: ``als/<dataset>/<engine>/<backend>/<constraint>`` with a ``/scoo`` or
+``/auto`` suffix for non-CC formats (CC rows keep the historical unsuffixed
+names so the checked-in baseline stays comparable). ``--xl-probe`` runs the
+"larger instance" demonstration: a geometry whose densified CC buffer alone
+exceeds host+device memory, decomposed under SCOO and recorded with the CC
+buffer size it avoided. The JSON artifact is the CI perf trajectory
+(BENCH_als.json); `benchmarks/compare.py` gates it against the checked-in
+baseline.
 """
 from __future__ import annotations
 
@@ -34,6 +45,7 @@ from repro.core import Parafac2Options, bucketize, init_state
 from repro.core import engine as als_engine
 from repro.core.parafac2 import als_step
 from repro.data import choa_like, movielens_like
+from repro.sparse import random_irregular
 from benchmarks.common import calibrate, emit, time_call
 
 # the benchmark's constraint axis: name -> per-mode specs
@@ -51,7 +63,27 @@ def _load(name: str, scale: float, seed: int):
         return choa_like(scale=scale, seed=seed)
     if name == "movielens":
         return movielens_like(scale=scale, seed=seed)
+    if name == "synthsparse":
+        # EHR-like low intra-slice density (≤1% of the kept-column
+        # rectangle): many observation rows, each touching a handful of the
+        # kept columns — the regime the SCOO format exists for. K scales
+        # like choa so --scale works uniformly.
+        return random_irregular(
+            n_subjects=max(64, int(256_000 * scale)), n_cols=4096,
+            max_rows=256, avg_nnz_per_subject=256, seed=seed)
     raise ValueError(name)
+
+
+def _peak_bytes(bt, opts) -> int:
+    """Compiled als_step device allocation (arguments + temporaries) with the
+    data passed as a runtime argument — counts the format's resident buffers
+    plus the step's scratch, the number that decides whether a geometry fits."""
+    state0 = init_state(bt, opts, seed=0)
+    compiled = jax.jit(
+        lambda d, s: als_step(d, s, opts)).lower(bt, state0).compile()
+    mem = compiled.memory_analysis()
+    return int((getattr(mem, "argument_size_in_bytes", 0) or 0)
+               + (getattr(mem, "temp_size_in_bytes", 0) or 0))
 
 
 def _make_runner(bt, opts, iters: int):
@@ -104,9 +136,16 @@ def main(argv=None):
     ap.add_argument("--engines", default="host,scan",
                     help="comma list from host,scan,mesh")
     ap.add_argument("--backends", default="jnp",
-                    help="comma list from jnp,pallas,auto")
+                    help="comma list from jnp,pallas,scoo,auto")
+    ap.add_argument("--formats", default="cc",
+                    help="comma list from cc,scoo,auto (device data format; "
+                         "cc rows keep the historical unsuffixed names)")
     ap.add_argument("--constraints", default="nonneg",
                     help=f"comma list from {','.join(CONSTRAINT_CASES)}")
+    ap.add_argument("--xl-probe", action="store_true",
+                    help="run the 'larger instance' demo: a geometry whose "
+                         "densified CC buffer exceeds memory, fit under SCOO "
+                         "(records the avoided CC bytes; slow — not for CI)")
     ap.add_argument("--check-every", type=int, default=10)
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed repetitions per case (median reported)")
@@ -128,43 +167,124 @@ def main(argv=None):
         "calib_seconds": calibrate(),
     }}
 
+    formats = [s.strip() for s in args.formats.split(",") if s.strip()]
+    # cc must be measured before the other formats so their vs-cc ratios
+    # (the gated headline metrics) exist regardless of the flag order
+    formats.sort(key=lambda f: f != "cc")
     for ds in [s.strip() for s in args.datasets.split(",") if s.strip()]:
         data = _load(ds, args.scale, args.seed)
         align = len(jax.devices()) if "mesh" in engines else 1
-        bt = bucketize(data, max_buckets=4, dtype=jnp.float32,
-                       subject_align=align)
-        host_per_iter = {}
-        for engine in engines:
-            for backend in backends:
-                for cname in constraints:
-                    opts = Parafac2Options(
-                        rank=args.rank, constraints=CONSTRAINT_CASES[cname],
-                        backend=backend, engine=engine,
-                        check_every=args.check_every)
-                    run = _make_runner(bt, opts, args.iters)
-                    seconds, final_fit = time_call(run, warmup=2,
-                                                   iters=args.repeats)
-                    per_iter = seconds / args.iters
-                    rel = ""
-                    if engine == "host":
-                        host_per_iter[(backend, cname)] = per_iter
-                    elif (backend, cname) in host_per_iter:
-                        speedup = host_per_iter[(backend, cname)] / per_iter
-                        rel = f"speedup_vs_host={speedup:.2f}x"
-                    emit(f"als/{ds}/{engine}/{backend}/{cname}", per_iter,
-                         f"fit={final_fit:.4f} {rel}".strip())
-                    rec = {"seconds_per_iter": per_iter,
-                           "seconds_total": seconds,
-                           "iters": args.iters, "final_fit": final_fit,
-                           "n_subjects": data.n_subjects, "nnz": data.nnz}
-                    if rel:
-                        rec["speedup_vs_host_per_iter"] = speedup
-                    results[f"{ds}/{engine}/{backend}/{cname}"] = rec
+        for fmt in formats:
+            bt = bucketize(data, max_buckets=4, dtype=jnp.float32,
+                           subject_align=align, format=fmt)
+            # CC rows keep the historical unsuffixed names; other formats
+            # append "/<fmt>" so the baseline comparison stays stable
+            suffix = "" if fmt == "cc" else f"/{fmt}"
+            host_per_iter = {}
+            cc_per_iter = {}
+            peak_cache = {}
+            for engine in engines:
+                for backend in backends:
+                    for cname in constraints:
+                        opts = Parafac2Options(
+                            rank=args.rank,
+                            constraints=CONSTRAINT_CASES[cname],
+                            backend=backend, engine=engine,
+                            check_every=args.check_every)
+                        if (backend, cname) not in peak_cache:
+                            peak_cache[(backend, cname)] = _peak_bytes(bt, opts)
+                        peak = peak_cache[(backend, cname)]
+                        run = _make_runner(bt, opts, args.iters)
+                        seconds, final_fit = time_call(run, warmup=2,
+                                                       iters=args.repeats)
+                        per_iter = seconds / args.iters
+                        rel = ""
+                        if engine == "host":
+                            host_per_iter[(backend, cname)] = per_iter
+                        elif (backend, cname) in host_per_iter:
+                            speedup = host_per_iter[(backend, cname)] / per_iter
+                            rel = f"speedup_vs_host={speedup:.2f}x"
+                        emit(f"als/{ds}/{engine}/{backend}/{cname}{suffix}",
+                             per_iter,
+                             f"fit={final_fit:.4f} peak={peak/2**20:.1f}MiB "
+                             f"{rel}".strip())
+                        rec = {"seconds_per_iter": per_iter,
+                               "seconds_total": seconds,
+                               "iters": args.iters, "final_fit": final_fit,
+                               "peak_bytes": peak,
+                               "n_subjects": data.n_subjects, "nnz": data.nnz}
+                        if rel:
+                            rec["speedup_vs_host_per_iter"] = speedup
+                        key = (engine, backend, cname)
+                        if fmt == "cc":
+                            cc_per_iter[key] = per_iter
+                            results.setdefault("_cc_ref", {})[
+                                f"{ds}/{engine}/{backend}/{cname}"] = {
+                                    "seconds_per_iter": per_iter,
+                                    "peak_bytes": peak}
+                        else:
+                            ref = results.get("_cc_ref", {}).get(
+                                f"{ds}/{engine}/{backend}/{cname}")
+                            if ref:
+                                rec["speedup_vs_cc_per_iter"] = (
+                                    ref["seconds_per_iter"] / per_iter)
+                                rec["peak_bytes_vs_cc"] = (
+                                    ref["peak_bytes"] / max(peak, 1))
+                        results[f"{ds}/{engine}/{backend}/{cname}{suffix}"] = rec
+
+    if args.xl_probe:
+        results["xl"] = _xl_probe(args)
+
+    # _cc_ref was scaffolding for the vs-cc ratios, not a gated namespace
+    results.pop("_cc_ref", None)
 
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1)
     return results
+
+
+def _xl_probe(args) -> dict:
+    """The "larger instance" demonstration: a ≤0.1%-density geometry whose
+    densified CC rectangle alone would not fit in memory, decomposed under
+    SCOO. Records the avoided CC bytes and the measured SCOO footprint."""
+    from repro.sparse import plan_buckets
+
+    print("[xl-probe] generating ~33M-nonzero low-density irregular tensor "
+          "(this is deliberately past the densifiable regime)")
+    data = random_irregular(n_subjects=16_384, n_cols=16_384, max_rows=1000,
+                            avg_nnz_per_subject=2048, seed=args.seed)
+    plan = plan_buckets(data.row_counts(), data.col_counts(),
+                        nnz_counts=data.nnz_counts(), max_buckets=4,
+                        sort_by="nnz")
+    # what CC would have to allocate for the same plan (f32 vals alone)
+    cc_bytes = sum(len(mem) * ip * cp * 4
+                   for (ip, cp), mem in zip(plan.shapes, plan.members))
+    bt = bucketize(data, dtype=jnp.float32, plan=plan,
+                   formats=["scoo"] * plan.n_buckets)
+    scoo_bytes = int(sum(
+        leaf.size * leaf.dtype.itemsize
+        for b in bt.buckets for leaf in jax.tree_util.tree_leaves(b)))
+    opts = Parafac2Options(rank=args.rank, constraints={"v": "nonneg",
+                                                        "w": "nonneg"},
+                           backend="auto", engine="host")
+    run = _make_runner(bt, opts, 2)
+    seconds, final_fit = time_call(run, warmup=1, iters=1)
+    per_iter = seconds / 2
+    emit("als/xl/scoo", per_iter,
+         f"fit={final_fit:.4f} scoo={scoo_bytes/2**30:.2f}GiB "
+         f"cc_would_alloc={cc_bytes/2**30:.1f}GiB")
+    return {
+        "n_subjects": data.n_subjects, "n_cols": data.n_cols,
+        "nnz": data.nnz, "seconds_per_iter_scoo": per_iter,
+        "final_fit": final_fit,
+        "scoo_device_bytes": scoo_bytes,
+        "cc_would_alloc_bytes": int(cc_bytes),
+        "cc_vs_scoo_bytes": cc_bytes / max(scoo_bytes, 1),
+        "note": "cc_would_alloc_bytes is the f32 vals rectangle alone under "
+                "the same bucket plan — it exceeds this host's memory, so "
+                "the CC path cannot run this geometry at all",
+    }
 
 
 if __name__ == "__main__":

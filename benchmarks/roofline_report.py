@@ -1,4 +1,11 @@
-"""Render the §Roofline table from the dry-run JSON (results/dryrun.json)."""
+"""Render the §Roofline table from the dry-run JSON (results/dryrun.json).
+
+PARAFAC2 cells appear alongside the LM cells; a cell lowered against the
+SCOO format (``dryrun.py --parafac2 --format scoo``) carries the O(nnz)
+useful-flops model — its MODEL/HLO column is the sparse path's roofline,
+counting only padded triplets instead of the densified CC rectangles — and
+renders with a ``/scoo`` shape tag.
+"""
 from __future__ import annotations
 
 import argparse
@@ -31,8 +38,11 @@ def render(path: str, mesh: str = "pod16x16", markdown: bool = True) -> str:
     sep = "|" + "---|" * 11
     lines = [hdr, sep]
     for r in rows:
+        shape = r["shape"]
+        if r.get("format") and r["format"] != "cc":
+            shape = f"{shape}/{r['format']}"
         lines.append(
-            f"| {r['arch']} | {r['shape']} | {fmt_t(r.get('t_compute'))} | "
+            f"| {r['arch']} | {shape} | {fmt_t(r.get('t_compute'))} | "
             f"{fmt_t(r.get('t_memory'))} | {fmt_t(r.get('t_memory_hlo'))} | "
             f"{fmt_t(r.get('t_collective'))} | {r.get('bottleneck','-')[2:]} | "
             f"{r.get('bytes_per_device',0)/2**30:.2f} | "

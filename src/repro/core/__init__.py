@@ -1,5 +1,7 @@
 """Paper core: PARAFAC2 + SPARTan MTTKRP on bucketed compressed-column data."""
-from repro.core.irregular import Bucket, Bucketed, BlockBucket, bucketize, to_block_bucket, LANE
+from repro.core.irregular import (
+    Bucket, Bucketed, BlockBucket, SparseBucket, bucketize, bucket_format,
+    to_block_bucket, FORMATS, LANE)
 from repro.core.backend import MttkrpBackend, get_backend
 from repro.core.constraints import (
     Constraint,
@@ -31,8 +33,11 @@ __all__ = [
     "Bucket",
     "Bucketed",
     "BlockBucket",
+    "SparseBucket",
     "bucketize",
+    "bucket_format",
     "to_block_bucket",
+    "FORMATS",
     "LANE",
     "MttkrpBackend",
     "get_backend",

@@ -1,8 +1,8 @@
 """Pluggable MTTKRP compute backends for the SPARTan ALS hot loop.
 
 The ALS algebra (``core/parafac2.py``) never touches a kernel directly: it
-asks an :class:`MttkrpBackend` for the three per-bucket SPARTan contractions
-and the shared stages. Three implementations:
+asks an :class:`MttkrpBackend` for the per-bucket SPARTan contractions
+and the shared stages. Four implementations:
 
 ``jnp``
     The pure-jnp math in :mod:`repro.core.spartan` — the reference path, exact
@@ -11,11 +11,28 @@ and the shared stages. Three implementations:
     Dispatches through :mod:`repro.kernels.ops` — Mosaic kernels on TPU,
     ``interpret=True`` emulation elsewhere (a correctness tool, not a fast
     path off-TPU). Outputs are f32 accumulations; f64 inputs are demoted.
+``scoo``
+    The O(nnz) sparse route (:class:`SparseBackend`): on SCOO buckets
+    (:class:`repro.core.irregular.SparseBucket`) every stage contracts the
+    flat COO triplets directly via :mod:`repro.kernels.scoo` and the
+    projected slices Y_k are NEVER materialized — ``project_bucket`` carries
+    Q itself. CC buckets delegate to ``jnp``.
 ``auto``
-    Per-call dispatch: ``pallas`` on TPU for kernel-friendly bucket geometry
-    (f32/bf16 with R a multiple of 8 and C a multiple of 128 — the MXU
-    sublane/lane quanta the ``col_align=128`` bucketizer default produces),
-    ``jnp`` for everything else, including all CPU/GPU runs.
+    Per-bucket dispatch: SCOO buckets take the ``scoo`` native route; CC
+    buckets go to ``pallas`` on TPU for kernel-friendly geometry (f32/bf16
+    with R a multiple of 8 and C a multiple of 128 — the MXU sublane/lane
+    quanta the ``col_align=128`` bucketizer default produces) and ``jnp``
+    everywhere else, including all CPU/GPU runs.
+
+Two API levels. The *bucket-level* stages (``xkv_bucket`` /
+``project_bucket`` / ``ykv_bucket`` / ``mode{1,2,3}_bucket``) are what
+``als_step`` calls: they take the bucket itself, so a backend can pick a
+representation per device format — this is where the CC-vs-SCOO split lives,
+and why a mixed-format ``Bucketed`` (``bucketize(format="auto")``) runs
+every engine/backend/constraint combination unchanged. The *array-level*
+methods (``mode1`` / ``mode2_compact`` / ``mode3`` / ``ykv`` on explicit
+Yc/Vg arrays) remain the CC contraction contract the kernel parity tests
+and micro benchmarks exercise.
 
 The backend layer is also the single place the ``"subjects"`` logical-axis
 sharding constraints (:func:`repro.dist.sharding.shard`) are applied: every
@@ -28,7 +45,7 @@ mode-1/mode-3 reuse entry points and the fit) dispatches per backend like
 the modes do.
 
 Select via ``Parafac2Options(backend=...)`` or ``--backend`` on the launchers
-and benchmarks. See docs/ARCHITECTURE.md (stage 4½).
+and benchmarks. See docs/ARCHITECTURE.md (stage 4½ and the SCOO stage).
 """
 from __future__ import annotations
 
@@ -39,12 +56,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import spartan
+from repro.core.irregular import SparseBucket
 from repro.dist.sharding import shard
 
 __all__ = [
     "MttkrpBackend",
     "JnpBackend",
     "PallasBackend",
+    "SparseBackend",
     "AutoBackend",
     "BACKENDS",
     "get_backend",
@@ -79,6 +98,40 @@ class MttkrpBackend(abc.ABC):
         return jnp.einsum("krc,kcl->krl", spartan._f(Yc), spartan._f(Vg))
 
     mode2_scatter = staticmethod(spartan.mode2_scatter)
+
+    # -- bucket-level stages (the als_step contract) ------------------------
+    # These take the bucket itself so an implementation can pick a per-format
+    # representation. The dense route below (CC buckets, and SCOO buckets
+    # under the jnp/pallas backends, whose SparseBucket.project is an O(nnz)
+    # segment-sum into the same compact Yc layout) materializes Yc [Kb,R,C];
+    # SparseBackend overrides carry Q instead and never build Yc.
+
+    def xkv_bucket(self, b, V: jax.Array,
+                   Vg: Optional[jax.Array] = None) -> jax.Array:
+        """X_k V [Kb, I_pad, R] — the Procrustes-step input."""
+        return self.shard_subjects(b.xk_times_v(V, Vg))
+
+    def project_bucket(self, b, Q: jax.Array):
+        """Per-bucket projected representation consumed by the *_bucket
+        stages below: the compact Yc [Kb, R, C] on the dense route."""
+        return self.shard_subjects(b.project(Q))
+
+    def ykv_bucket(self, b, proj, V: jax.Array) -> jax.Array:
+        """Y_k V [Kb, R, R] for factor ``V`` (the W-update/fit G product)."""
+        return self.ykv(proj, b.gather_v(V))
+
+    def mode1_bucket(self, b, proj, Wb: jax.Array,
+                     V: Optional[jax.Array] = None, *, YkV=None) -> jax.Array:
+        Vg = None if YkV is not None else b.gather_v(V)
+        return self.mode1(proj, Vg, Wb, b.subject_mask, YkV=YkV)
+
+    def mode2_bucket(self, b, proj, H: jax.Array, Wb: jax.Array) -> jax.Array:
+        return self.mode2_compact(proj, H, Wb, b.col_mask, b.subject_mask)
+
+    def mode3_bucket(self, b, proj, H: jax.Array,
+                     V: Optional[jax.Array] = None, *, YkV=None) -> jax.Array:
+        Vg = None if YkV is not None else b.gather_v(V)
+        return self.mode3(proj, Vg, H, b.subject_mask, YkV=YkV)
 
     # -- per-bucket contractions --------------------------------------------
     def mode1(self, Yc, Vg, Wb, subject_mask, *, YkV=None) -> jax.Array:
@@ -192,13 +245,109 @@ class PallasBackend(MttkrpBackend):
             self._k32(Yc), self._k32(Vg), self._k32(H),
             subject_mask=self._k32(subject_mask), YkV=self._k32(YkV))
 
+    # SCOO buckets: the Pallas one-hot/scalar-prefetch segment-sum kernels
+    # produce X_k V and the compact Yc (kernels/scoo.py); the per-stage CC
+    # kernels then consume Yc exactly as for a CC bucket.
+    def xkv_bucket(self, b, V, Vg=None):
+        if isinstance(b, SparseBucket):
+            from repro.kernels import scoo
+            Vg = b.gather_v(V) if Vg is None else Vg
+            return self.shard_subjects(scoo.xk_times_v(
+                self._k32(b.vals), b.rows, b.lcols, self._k32(Vg), b.i_pad,
+                nnz_counts=b.nnz_counts, use_pallas=True))
+        return super().xkv_bucket(b, V, Vg)
+
+    def project_bucket(self, b, Q):
+        if isinstance(b, SparseBucket):
+            from repro.kernels import scoo
+            return self.shard_subjects(scoo.project(
+                self._k32(b.vals), b.rows, b.lcols, self._k32(Q), b.c_pad,
+                nnz_counts=b.nnz_counts, use_pallas=True))
+        return super().project_bucket(b, Q)
+
+
+class SparseBackend(MttkrpBackend):
+    """The O(nnz) SCOO-native route (:mod:`repro.kernels.scoo`).
+
+    On SCOO buckets the projected slices are never materialized:
+    ``project_bucket`` returns Q itself and every downstream stage contracts
+    the flat COO triplets directly (gather + segment-sum / outer-product
+    accumulation). CC buckets — present in a mixed-format Bucketed from
+    ``bucketize(format="auto")`` — delegate to the inner dense backend
+    (``jnp`` by default), as do the array-level CC contraction methods.
+    """
+
+    name = "scoo"
+
+    def __init__(self, inner: Optional[MttkrpBackend] = None):
+        self._inner = inner if inner is not None else JnpBackend()
+
+    # -- array-level CC contract: delegate wholesale ------------------------
+    def ykv(self, Yc, Vg):
+        return self._inner.ykv(Yc, Vg)
+
+    def _mode1(self, Yc, Vg, Wb, subject_mask, *, YkV=None):
+        return self._inner._mode1(Yc, Vg, Wb, subject_mask, YkV=YkV)
+
+    def _mode2_compact(self, Yc, H, Wb, col_mask, subject_mask):
+        return self._inner._mode2_compact(Yc, H, Wb, col_mask, subject_mask)
+
+    def _mode3(self, Yc, Vg, H, subject_mask, *, YkV=None):
+        return self._inner._mode3(Yc, Vg, H, subject_mask, YkV=YkV)
+
+    # -- bucket-level stages: SCOO-native, Yc-free --------------------------
+    def _ykv_native(self, b: SparseBucket, Q, V):
+        from repro.kernels import scoo
+        return scoo.ykv_scoo(b.vals, b.rows, b.lcols,
+                             self.shard_subjects(Q), b.gather_v(V))
+
+    def project_bucket(self, b, Q):
+        if not isinstance(b, SparseBucket):
+            return self._inner.project_bucket(b, Q)
+        return self.shard_subjects(Q)   # carry Q; Yc is never built
+
+    def ykv_bucket(self, b, proj, V):
+        if not isinstance(b, SparseBucket):
+            return self._inner.ykv_bucket(b, proj, V)
+        return self._ykv_native(b, proj, V)
+
+    def mode1_bucket(self, b, proj, Wb, V=None, *, YkV=None):
+        if not isinstance(b, SparseBucket):
+            return self._inner.mode1_bucket(b, proj, Wb, V, YkV=YkV)
+        if YkV is None:
+            YkV = self._ykv_native(b, proj, V)
+        # YkV in hand, the remaining Hadamard + subject reduction is the
+        # shared R x R algebra (uniform shard constraints included)
+        return self.mode1(None, None, Wb, b.subject_mask, YkV=YkV)
+
+    def mode2_bucket(self, b, proj, H, Wb):
+        if not isinstance(b, SparseBucket):
+            return self._inner.mode2_bucket(b, proj, H, Wb)
+        from repro.kernels import scoo
+        Q, Wb, col_mask, smask = map(
+            self.shard_subjects, (proj, Wb, b.col_mask, b.subject_mask))
+        return self.shard_subjects(scoo.mode2_compact_scoo(
+            b.vals, b.rows, b.lcols, Q, H, Wb, col_mask, smask,
+            cperm=b.cperm, col_ends=b.col_ends))
+
+    def mode3_bucket(self, b, proj, H, V=None, *, YkV=None):
+        if not isinstance(b, SparseBucket):
+            return self._inner.mode3_bucket(b, proj, H, V, YkV=YkV)
+        if YkV is None:
+            YkV = self._ykv_native(b, proj, V)
+        return self.mode3(None, None, H, b.subject_mask, YkV=YkV)
+
 
 class AutoBackend(MttkrpBackend):
-    """Per-platform, per-bucket-geometry dispatch between jnp and pallas.
+    """Per-platform, per-bucket dispatch between jnp, pallas, and scoo.
 
-    The decision is made at trace time from static shapes/dtypes, so under
-    jit each bucket compiles against exactly one implementation. Buckets the
-    kernels handle poorly (odd R/C, f64, non-TPU platforms) fall back to jnp.
+    The decision is made at trace time from static bucket types and
+    shapes/dtypes, so under jit each bucket compiles against exactly one
+    implementation. SCOO buckets always take the O(nnz) native route
+    (:class:`SparseBackend` — the format was chosen *because* the bucket is
+    sparse, so the dense kernels are never the right answer for it); CC
+    buckets the kernels handle poorly (odd R/C, f64, non-TPU platforms)
+    fall back to jnp.
     """
 
     name = "auto"
@@ -206,6 +355,38 @@ class AutoBackend(MttkrpBackend):
     def __init__(self):
         self._jnp = JnpBackend()
         self._pallas = PallasBackend()
+        self._sparse = SparseBackend(inner=self._jnp)
+
+    # -- bucket-level: SCOO buckets -> the native sparse route --------------
+    def xkv_bucket(self, b, V, Vg=None):
+        if isinstance(b, SparseBucket):
+            return self._sparse.xkv_bucket(b, V, Vg)
+        return super().xkv_bucket(b, V, Vg)
+
+    def project_bucket(self, b, Q):
+        if isinstance(b, SparseBucket):
+            return self._sparse.project_bucket(b, Q)
+        return super().project_bucket(b, Q)
+
+    def ykv_bucket(self, b, proj, V):
+        if isinstance(b, SparseBucket):
+            return self._sparse.ykv_bucket(b, proj, V)
+        return super().ykv_bucket(b, proj, V)
+
+    def mode1_bucket(self, b, proj, Wb, V=None, *, YkV=None):
+        if isinstance(b, SparseBucket):
+            return self._sparse.mode1_bucket(b, proj, Wb, V, YkV=YkV)
+        return super().mode1_bucket(b, proj, Wb, V, YkV=YkV)
+
+    def mode2_bucket(self, b, proj, H, Wb):
+        if isinstance(b, SparseBucket):
+            return self._sparse.mode2_bucket(b, proj, H, Wb)
+        return super().mode2_bucket(b, proj, H, Wb)
+
+    def mode3_bucket(self, b, proj, H, V=None, *, YkV=None):
+        if isinstance(b, SparseBucket):
+            return self._sparse.mode3_bucket(b, proj, H, V, YkV=YkV)
+        return super().mode3_bucket(b, proj, H, V, YkV=YkV)
 
     @staticmethod
     def _platform_ok(probe: Optional[jax.Array]) -> bool:
@@ -252,12 +433,13 @@ class AutoBackend(MttkrpBackend):
         return self._pick(Yc)._mode3(Yc, Vg, H, subject_mask, YkV=None)
 
 
-BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend(), "auto": AutoBackend()}
+BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend(),
+            "scoo": SparseBackend(), "auto": AutoBackend()}
 
 
 def get_backend(name) -> MttkrpBackend:
-    """Resolve a backend by name ("jnp" | "pallas" | "auto") or pass an
-    :class:`MttkrpBackend` instance through unchanged."""
+    """Resolve a backend by name ("jnp" | "pallas" | "scoo" | "auto") or pass
+    an :class:`MttkrpBackend` instance through unchanged."""
     if isinstance(name, MttkrpBackend):
         return name
     try:

@@ -20,9 +20,11 @@ the leading bucket axis (the "subjects" rule in :mod:`repro.dist.sharding`;
 mesh). ``mode1_reuse=True`` enables the beyond-paper optimization
 Y_k V = Q_k^T (X_k V) (cached from step 1). The three MTTKRPs dispatch
 through a pluggable compute backend (``opts.backend``: "jnp" | "pallas" |
-"auto" — see :mod:`repro.core.backend`), so the same ALS algebra runs the
-pure-jnp SPARTan math or the Pallas TPU kernels. See docs/ARCHITECTURE.md
-(stages 3-5) for the full data flow and sharding story.
+"scoo" | "auto" — see :mod:`repro.core.backend`), so the same ALS algebra
+runs the pure-jnp SPARTan math, the Pallas TPU kernels, or the O(nnz)
+SCOO-native segment-sum route — per bucket, since a ``bucketize(
+format="auto")`` dataset mixes CC and SCOO buckets. See docs/ARCHITECTURE.md
+(stages 3-5 and the SCOO stage) for the full data flow and sharding story.
 """
 from __future__ import annotations
 
@@ -75,9 +77,10 @@ class Parafac2Options:
     admm_iters: int = 10
     dtype: Any = jnp.float32
     # MTTKRP compute backend: "jnp" (pure-jnp spartan math, exact reference),
-    # "pallas" (TPU kernels; interpret-mode emulation off-TPU), or "auto"
-    # (pallas on TPU for kernel-friendly bucket geometry, jnp otherwise).
-    # See repro.core.backend.
+    # "pallas" (TPU kernels; interpret-mode emulation off-TPU), "scoo" (the
+    # O(nnz) SCOO-native route on SparseBucket data, jnp on CC buckets), or
+    # "auto" (scoo for SCOO buckets; pallas on TPU for kernel-friendly CC
+    # bucket geometry, jnp otherwise). See repro.core.backend.
     backend: str = "auto"
     # W layout: "global" [K,R] (simple, interpretable) or "bucketed" (tuple of
     # per-bucket [Kb,R] rows aligned with the data shards — no W gathers under
@@ -195,18 +198,24 @@ def w_global(data: Bucketed, W) -> jnp.ndarray:
 def _procrustes_project(
     b: Bucket, H: jax.Array, V: jax.Array, W: jax.Array, opts: Parafac2Options,
     i: int = 0, be: Optional[MttkrpBackend] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Steps 1+2 for one bucket -> (Yc, XkV, Q)."""
+) -> Tuple[Any, jax.Array, jax.Array]:
+    """Steps 1+2 for one bucket -> (proj, XkV, Q).
+
+    ``proj`` is the backend's per-bucket projected representation
+    (:meth:`MttkrpBackend.project_bucket`): the compact Yc [Kb, R, C] on the
+    dense route, Q itself on the SCOO-native route (where Y_k is never
+    materialized). ``als_step`` only ever hands it back to the same backend.
+    """
     be = get_backend(opts.backend) if be is None else be
     Vg = b.gather_v(V)                                   # [Kb, C, R]
-    XkV = be.shard_subjects(b.xk_times_v(V, Vg))         # [Kb, I, R]
+    XkV = be.xkv_bucket(b, V, Vg)                        # [Kb, I, R]
     Wb = _w_rows(W, b, i)                                # [Kb, R]
     # B_k = X_k V S_k H^T  == (XkV * w_k) @ H^T
     B = jnp.einsum("kir,lr->kil", XkV * Wb[:, None, :], H)
     Q = solve_q(B, opts.procrustes)                      # [Kb, I, R]
     Q = be.shard_subjects(Q * b.subject_mask[:, None, None])
-    Yc = be.shard_subjects(b.project(Q))                 # [Kb, R, C]
-    return Yc, XkV, Q
+    proj = be.project_bucket(b, Q)
+    return proj, XkV, Q
 
 
 def als_step(
@@ -240,14 +249,14 @@ def als_step(
 
     # ---- 3a: H update (mode-1 MTTKRP) --------------------------------------
     M1 = jnp.zeros((R, R), opts.dtype)
-    for i, (b, (Yc, XkV, Q)) in enumerate(zip(data.buckets, per_bucket)):
+    for i, (b, (proj, XkV, Q)) in enumerate(zip(data.buckets, per_bucket)):
         Wb = _w_rows(W, b, i)
         if opts.mode1_reuse:
             # Y_k V = Q_k^T (X_k V): skip the gather+matmul on sparse data.
             YkV = jnp.einsum("kir,kil->krl", Q, XkV)
-            M1 = M1 + be.mode1(Yc, None, Wb, b.subject_mask, YkV=YkV)
+            M1 = M1 + be.mode1_bucket(b, proj, Wb, YkV=YkV)
         else:
-            M1 = M1 + be.mode1(Yc, b.gather_v(V), Wb, b.subject_mask)
+            M1 = M1 + be.mode1_bucket(b, proj, Wb, V)
     M1 = psum_subjects(M1)
     H_new, aux_h = cons["h"].update(M1, _w_gram(W) * (V.T @ V), H, aux["h"],
                                     **solve_kw)
@@ -262,9 +271,9 @@ def als_step(
 
     # ---- 3b: V update (mode-2 MTTKRP) --------------------------------------
     M2 = jnp.zeros((J, R), opts.dtype)
-    for i, (b, (Yc, _, _)) in enumerate(zip(data.buckets, per_bucket)):
+    for i, (b, (proj, _, _)) in enumerate(zip(data.buckets, per_bucket)):
         Wb = _w_rows(W, b, i)
-        A = be.mode2_compact(Yc, H_new, Wb, b.col_mask, b.subject_mask)
+        A = be.mode2_bucket(b, proj, H_new, Wb)
         M2 = M2 + be.mode2_scatter(A, b.cols, J).astype(M2.dtype)
     M2 = psum_subjects(M2)
     V_new, aux_v = cons["v"].update(M2, _w_gram(W) * (H_new.T @ H_new), V,
@@ -280,11 +289,11 @@ def als_step(
     gram3 = VtV * (H_new.T @ H_new)
     rows_per_bucket = []
     Gs = []   # G_k = Y_k V_new per bucket, shared with the fit computation
-    for b, (Yc, _, _) in zip(data.buckets, per_bucket):
-        G = be.ykv(Yc, b.gather_v(V_new))
+    for b, (proj, _, _) in zip(data.buckets, per_bucket):
+        G = be.ykv_bucket(b, proj, V_new)
         Gs.append(G)
         rows_per_bucket.append(
-            be.mode3(Yc, None, H_new, b.subject_mask, YkV=G))
+            be.mode3_bucket(b, proj, H_new, YkV=G))
     if bucketed:
         # per-bucket W rows update in place — no K-wide scatter, no gathers;
         # per-bucket aux rides in a list aligned with the buckets
@@ -308,7 +317,7 @@ def als_step(
     # with G_k = Y_k V_new and Φ = H^T H — all R x R algebra.
     Phi = H_new.T @ H_new
     delta = jnp.zeros((), opts.dtype)
-    for i, (b, (Yc, _, _)) in enumerate(zip(data.buckets, per_bucket)):
+    for i, b in enumerate(data.buckets):
         G = Gs[i]                                              # [Kb, R, R]
         Wb = _w_rows(W_new, b, i)                              # [Kb, R]
         cross = jnp.einsum("rl,krl,kl,k->", H_new, G, Wb, b.subject_mask)
@@ -365,7 +374,7 @@ def reconstruct_uk(
     """Assemble U_k = Q_k H per subject (host-side, for interpretation)."""
     out: Dict[int, np.ndarray] = {}
     for i, b in enumerate(data.buckets):
-        Yc, XkV, Q = _procrustes_project(b, state.H, state.V, state.W, opts, i)
+        _, _, Q = _procrustes_project(b, state.H, state.V, state.W, opts, i)
         Uk = np.asarray(jnp.einsum("kir,rl->kil", Q, state.H))
         sids = np.asarray(b.subject_ids)
         smask = np.asarray(b.subject_mask)

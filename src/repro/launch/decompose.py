@@ -1,15 +1,18 @@
 """PARAFAC2 decomposition driver — the paper's workload as a first-class job.
 
   PYTHONPATH=src python -m repro.launch.decompose --dataset choa --scale 0.002 \
-      --rank 5 --iters 20 --engine scan --json out.json \
+      --rank 5 --iters 20 --engine scan --format auto --json out.json \
       --constraint v=nonneg+l1:0.1,w=smooth:0.1
 
 ``--engine`` picks the ALS execution engine (host | scan | mesh — see
-repro.core.engine); ``--constraint`` the per-mode factor constraints
-(COPA-style AO-ADMM layer — see repro.core.constraints; a bare spec such as
-``--constraint nonneg_admm`` applies to both V and W); ``--json`` writes the
-machine-readable run summary CI and the benchmarks consume, including the
-resolved constraint block.
+repro.core.engine); ``--format`` the device data format (cc | scoo | auto —
+repro.core.irregular; "auto" routes each bucket CC-vs-SCOO by measured
+density, the O(nnz) sparse path for EHR-like sparsity); ``--constraint`` the
+per-mode factor constraints (COPA-style AO-ADMM layer — see
+repro.core.constraints; a bare spec such as ``--constraint nonneg_admm``
+applies to both V and W); ``--json`` writes the machine-readable run summary
+CI and the benchmarks consume, including the resolved constraint block and
+the per-bucket format/density decisions.
 """
 from __future__ import annotations
 
@@ -21,12 +24,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ENGINES, Parafac2Options, bucketize, fit
+from repro.core import ENGINES, FORMATS, Parafac2Options, bucketize, fit
 from repro.core.constraints import (
     available as available_constraints, constraint_summary, parse_constraint_arg)
 from repro.core.interpret import subject_top_phenotypes, top_phenotype_features
 from repro.data import choa_like, movielens_like
-from repro.sparse import random_irregular
+from repro.sparse import plan_buckets, random_irregular, route_formats
 
 
 def load_dataset(name: str, scale: float, seed: int):
@@ -56,9 +59,14 @@ def main(argv=None) -> dict:
                          "spec applies to v and w; registered: "
                          f"{', '.join(available_constraints())} — see "
                          "repro.core.constraints). Overrides --nonneg.")
-    ap.add_argument("--backend", default="auto", choices=["jnp", "pallas", "auto"],
+    ap.add_argument("--backend", default="auto",
+                    choices=["jnp", "pallas", "scoo", "auto"],
                     help="MTTKRP compute backend for the ALS hot loop "
                          "(see repro.core.backend)")
+    ap.add_argument("--format", default="cc", choices=list(FORMATS),
+                    help="device data format (repro.core.irregular): cc "
+                         "(dense over kept columns), scoo (O(nnz) flat COO), "
+                         "auto (route each bucket by measured density)")
     ap.add_argument("--engine", default="host", choices=list(ENGINES),
                     help="ALS execution engine: host (per-iteration dispatch), "
                          "scan (device-resident compiled chunks), mesh "
@@ -89,12 +97,22 @@ def main(argv=None) -> dict:
 
     # shard_map needs every bucket's subject count to divide the shard count
     subject_align = len(jax.devices()) if args.engine == "mesh" else 1
-    bt = bucketize(data, max_buckets=args.buckets, dtype=jnp.float32,
-                   subject_align=subject_align)
-    waste = 1.0 - data.nnz / sum(
-        int(np.prod(b.vals.shape)) for b in bt.buckets)
-    print(f"[bucketize] {len(bt.buckets)} buckets; padded-cell occupancy "
-          f"{(1-waste)*100:.1f}% nnz")
+    rc, ccnt, nnzc = data.row_counts(), data.col_counts(), data.nnz_counts()
+    plan = plan_buckets(rc, ccnt, max_buckets=args.buckets, nnz_counts=nnzc,
+                        sort_by="nnz" if args.format == "scoo" else "area")
+    fmts = route_formats(plan, nnzc, format=args.format)
+    bt = bucketize(data, dtype=jnp.float32, subject_align=subject_align,
+                   plan=plan, formats=fmts)
+    bucket_stats = plan.stats(rc, ccnt, nnzc, formats=fmts)
+    for rec, b in zip(bucket_stats, bt.buckets):
+        rec["device_bytes"] = int(sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(b)))
+    device_bytes = sum(rec["device_bytes"] for rec in bucket_stats)
+    print(f"[bucketize] {len(bt.buckets)} buckets ({args.format}): "
+          + ", ".join(f"{r['format']}@{r['density']*100:.1f}%"
+                      for r in bucket_stats)
+          + f"; device bytes {device_bytes/2**20:.1f} MiB")
 
     opts = Parafac2Options(rank=args.rank, constraints=specs, backend=args.backend,
                            engine=args.engine, check_every=args.check_every)
@@ -114,6 +132,11 @@ def main(argv=None) -> dict:
         "dataset": args.dataset, "scale": args.scale, "rank": args.rank,
         "engine": args.engine, "backend": args.backend, "tol": args.tol,
         "check_every": args.check_every, "seed": args.seed,
+        # device-format decisions: requested format + the per-bucket routing
+        # (chosen format, density, nnz, padded shape, device bytes)
+        "format": args.format,
+        "buckets": bucket_stats,
+        "device_bytes": device_bytes,
         # resolved (canonicalized) per-mode constraint specs + the V sparsity
         # they induced — the l1 knob's observable effect
         "constraints": constraint_summary(specs),

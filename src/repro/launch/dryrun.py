@@ -17,7 +17,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.analysis.roofline import (
     TPU_V5E, calibrate_flops_convention, model_flops, roofline_terms)
 from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
-from repro.core import Bucket, Bucketed, Parafac2Options, Parafac2State, als_step
+from repro.core import (
+    Bucket, Bucketed, Parafac2Options, Parafac2State, SparseBucket, als_step)
 from repro.dist.sharding import LM_RULES, SP_RULES, axis_rules, param_shardings
 from repro.launch.mesh import make_production_mesh
 from repro.models import build
@@ -253,11 +254,14 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh, mesh_name: str,
 # ---------------------------------------------------------------------------
 
 def parafac2_specs(K: int, J: int, R: int, geometry, dp: int,
-                   opts: Optional[Parafac2Options] = None):
+                   opts: Optional[Parafac2Options] = None,
+                   format: str = "cc"):
     """ShapeDtypeStruct Bucketed + state for a dataset geometry
-    [(Kb, I_pad, C_pad)...]; Kb rounded up to the DP shard count. ADMM-routed
-    constraints in ``opts`` add their carried ``(Z, U)`` dual pairs to the
-    state's aux pytree (bucketed-W aux follows the bucket shapes)."""
+    [(Kb, I_pad, C_pad, N_pad)...]; Kb rounded up to the DP shard count.
+    ``format="scoo"`` lowers the O(nnz) flat-COO layout (N_pad triplets per
+    subject) instead of the densified CC rectangle. ADMM-routed constraints
+    in ``opts`` add their carried ``(Z, U)`` dual pairs to the state's aux
+    pytree (bucketed-W aux follows the bucket shapes)."""
     from repro.core.parafac2 import constraints_for
 
     f32 = jnp.float32
@@ -266,16 +270,32 @@ def parafac2_specs(K: int, J: int, R: int, geometry, dp: int,
     K = ((K + dp - 1) // dp) * dp   # pad subject count to the DP shard count
     bf16 = jnp.bfloat16
     buckets = []
-    for kb, ip, cp in geometry:
+    for kb, ip, cp, npad in geometry:
         kb = ((kb + dp - 1) // dp) * dp
-        buckets.append(Bucket(
-            vals=sds((kb, ip, cp), bf16),   # bf16 slice values, f32 accum
+        common = dict(
             cols=sds((kb, cp), i32),
             col_mask=sds((kb, cp), f32),
             subject_ids=sds((kb,), i32),
             subject_mask=sds((kb,), f32),
             row_counts=sds((kb,), i32),
-        ))
+        )
+        if format == "scoo":
+            buckets.append(SparseBucket(
+                vals=sds((kb, npad), bf16),   # bf16 triplet values, f32 accum
+                rows=sds((kb, npad), i32),
+                lcols=sds((kb, npad), i32),
+                row_ends=sds((kb, ip), i32),
+                cperm=sds((kb, npad), i32),
+                col_ends=sds((kb, cp), i32),
+                nnz_counts=sds((kb,), i32),
+                n_rows_pad=ip,
+                **common,
+            ))
+        else:
+            buckets.append(Bucket(
+                vals=sds((kb, ip, cp), bf16),   # bf16 slice values, f32 accum
+                **common,
+            ))
     data = Bucketed(buckets=buckets, n_subjects=K, n_cols=J, norm_sq=1.0)
     cons = constraints_for(opts) if opts is not None else None
 
@@ -299,13 +319,10 @@ def parafac2_shardings(data: Bucketed, state, mesh: Mesh, *, wide: bool = True):
     the paper's workload has no tensor-parallel dimension, so leaving "model"
     idle wastes 16x memory/compute capacity (§Perf 'subject-wide sharding')."""
     axes = tuple(mesh.axis_names) if wide else _dp_axes(mesh)
-    def b_shard(b: Bucket):
-        kb = NamedSharding(mesh, P(axes))
-        return Bucket(
-            vals=kb, cols=kb, col_mask=kb, subject_ids=kb, subject_mask=kb,
-            row_counts=kb)
-    d_sh = Bucketed(buckets=[b_shard(b) for b in data.buckets],
-                    n_subjects=data.n_subjects, n_cols=data.n_cols, norm_sq=1.0)
+    # every bucket leaf (CC or SCOO) is Kb-leading -> split over the subject
+    # axes; tree_map keeps the Bucket/SparseBucket pytree structure intact
+    kb = NamedSharding(mesh, P(axes))
+    d_sh = jax.tree_util.tree_map(lambda _: kb, data)
     rep = NamedSharding(mesh, P())
     subj = NamedSharding(mesh, P(axes))
     # ADMM aux shardings follow the owning factor: bucketed-W duals split
@@ -323,35 +340,43 @@ def parafac2_shardings(data: Bucketed, state, mesh: Mesh, *, wide: bool = True):
 
 
 PARAFAC2_CELLS = {
-    # name: (K, J, R, [(Kb_per_bucket, I_pad, C_pad)...]) — CHOA / synth-500M
+    # name: (K, J, R, [(Kb_per_bucket, I_pad, C_pad, N_pad)...]) — CHOA /
+    # synth-500M. N_pad is the SCOO per-subject triplet pad (≈4-8 nonzeros
+    # per observation row — EHR-like ~1-3% intra-slice density); the CC
+    # lowering ignores it.
     "parafac2-choa-r40": (464_900, 1_328, 40,
-                          [(116_225, 32, 64), (116_225, 64, 96),
-                           (116_225, 96, 128), (116_225, 168, 256)]),
+                          [(116_225, 32, 64, 128), (116_225, 64, 96, 256),
+                           (116_225, 96, 128, 384), (116_225, 168, 256, 672)]),
     "parafac2-synth500m-r40": (1_000_000, 5_000, 40,
-                               [(250_000, 48, 256), (250_000, 64, 384),
-                                (250_000, 80, 512), (250_000, 104, 640)]),
+                               [(250_000, 48, 256, 384), (250_000, 64, 384, 512),
+                                (250_000, 80, 512, 640), (250_000, 104, 640, 832)]),
 }
 
 
 def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
                       backend: str = "jnp", engine: str = "host",
-                      check_every: int = 8, constraint: str = ""):
+                      check_every: int = 8, constraint: str = "",
+                      format: str = "cc"):
     """Lower + compile one PARAFAC2 cell. ``engine`` selects what one
     dispatch is: a single als_step ("host" — today's per-iteration loop), a
     check_every-iteration lax.scan chunk under GSPMD ("scan"), or the same
     chunk wrapped in shard_map over the subjects axes ("mesh") — see
-    repro.core.engine. ``constraint`` is the driver spec syntax
-    ("v=nonneg_admm,w=nonneg_admm"); ADMM specs put the carried dual pytree
-    into the lowered state so the production program shape includes the
-    AO-ADMM solver state."""
+    repro.core.engine. ``format`` picks the device layout the cell lowers
+    against: "cc" (densified rectangles) or "scoo" (O(nnz) flat COO — the
+    sparse path's production program shape + roofline). ``constraint`` is
+    the driver spec syntax ("v=nonneg_admm,w=nonneg_admm"); ADMM specs put
+    the carried dual pytree into the lowered state so the production program
+    shape includes the AO-ADMM solver state."""
     from repro.core import engine as als_engine
     from repro.core.constraints import parse_constraint_arg
 
     K, J, R, geom = PARAFAC2_CELLS[name]
     n_chips = int(np.prod(mesh.devices.shape))
-    rec = {"arch": name, "shape": "als_step", "mesh": mesh_name,
+    rec = {"arch": name + ("+scoo" if format == "scoo" else ""),
+           "shape": "als_step", "mesh": mesh_name,
            "kind": "parafac2", "n_chips": n_chips, "params": 0,
-           "active_params": 0, "backend": backend, "engine": engine}
+           "active_params": 0, "backend": backend, "engine": engine,
+           "format": format}
     specs = (parse_constraint_arg(constraint) if constraint
              else {"v": "nonneg", "w": "nonneg"})
     rec["constraints"] = {m: s for m, s in specs.items()}
@@ -360,7 +385,7 @@ def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
                            check_every=check_every)
     wide = rec.get("wide", True)
     dp = _axis_size(mesh, tuple(mesh.axis_names) if wide else ("pod", "data"))
-    data, state = parafac2_specs(K, J, R, geom, dp, opts)
+    data, state = parafac2_specs(K, J, R, geom, dp, opts, format=format)
     d_sh, s_sh = parafac2_shardings(data, state, mesh, wide=wide)
     t0 = time.perf_counter()
     with axis_rules(LM_RULES, mesh), mesh:
@@ -401,9 +426,15 @@ def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
         dominant = max(("t_compute", "t_memory", "t_collective"),
                        key=lambda k: rec[k])
         rec["bottleneck"] = dominant
-        # useful work: the SPARTan flop count (Procrustes + 3 MTTKRPs + grams)
-        nnz_padded = sum(kb * ip * cp for kb, ip, cp in geom)
-        useful = (6.0 * nnz_padded * R + 10.0 * K * R * R) / n_chips
+        # useful work: the SPARTan flop count (Procrustes + 3 MTTKRPs +
+        # grams). CC pays the densified rectangle; SCOO's O(nnz) roofline
+        # counts only the padded triplets (the benchmarks/roofline_report.py
+        # entry for the sparse path).
+        if format == "scoo":
+            cells = sum(kb * npad for kb, ip, cp, npad in geom)
+        else:
+            cells = sum(kb * ip * cp for kb, ip, cp, npad in geom)
+        useful = (6.0 * cells * R + 10.0 * K * R * R) / n_chips
         rec["model_flops_per_device"] = useful
         rec["useful_fraction"] = useful / terms["hlo_flops"] if terms["hlo_flops"] else 0.0
     return rec
@@ -435,9 +466,14 @@ def main(argv=None):
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--out", default=os.path.normpath(RESULTS_PATH))
     ap.add_argument("--parafac2", action="store_true", help="also run paper-workload cells")
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas", "auto"],
+    ap.add_argument("--backend", default="jnp",
+                    choices=["jnp", "pallas", "scoo", "auto"],
                     help="MTTKRP backend for the PARAFAC2 cells (the host "
                          "placeholder mesh lowers pallas in interpret mode)")
+    ap.add_argument("--format", default="cc", choices=["cc", "scoo"],
+                    help="device data format the PARAFAC2 cells lower "
+                         "against: cc (densified rectangles) or scoo (the "
+                         "O(nnz) flat-COO path; N_pad from PARAFAC2_CELLS)")
     ap.add_argument("--engine", default="host", choices=["host", "scan", "mesh"],
                     help="ALS execution engine for the PARAFAC2 cells: what "
                          "one lowered dispatch is (see repro.core.engine)")
@@ -508,6 +544,7 @@ def main(argv=None):
                 cells.append((next(iter(PARAFAC2_CELLS)), admm_spec, "+admm"))
             for cell, cons, tag in cells:
                 key = (f"{cell}|als_step|{mesh_name}"
+                       + (f"+{args.format}" if args.format != "cc" else "")
                        + (f"+{args.backend}" if args.backend != "jnp" else "")
                        + (f"+{args.engine}" if args.engine != "host" else "")
                        + (f"+[{cons}]" if cons else "")
@@ -520,7 +557,8 @@ def main(argv=None):
                                             backend=args.backend,
                                             engine=args.engine,
                                             check_every=args.check_every,
-                                            constraint=cons)
+                                            constraint=cons,
+                                            format=args.format)
                     results[key] = rec
                     save_results(args.out, results)
                     print(f"[dryrun] {key}: OK bottleneck={rec['bottleneck']} "

@@ -5,7 +5,12 @@ from repro.sparse.coo import (
     random_irregular,
     random_parafac2,
 )
-from repro.sparse.bucketing import BucketPlan, plan_buckets
+from repro.sparse.bucketing import (
+    SCOO_DENSITY_THRESHOLD,
+    BucketPlan,
+    plan_buckets,
+    route_formats,
+)
 
 __all__ = [
     "IrregularCOO",
@@ -15,4 +20,6 @@ __all__ = [
     "random_parafac2",
     "BucketPlan",
     "plan_buckets",
+    "route_formats",
+    "SCOO_DENSITY_THRESHOLD",
 ]

@@ -1,24 +1,46 @@
 """Size-bucketing planner: ragged subjects -> a few static-shape buckets.
 
-XLA needs static shapes. Subjects vary in row count I_k and nonzero-column
-count c_k; we group them into buckets whose padded (I_pad, C_pad) geometry is
-chosen to bound padding waste while keeping the number of distinct compiled
-shapes small. Pad targets are rounded up to multiples of ``row_align`` /
-``col_align`` (8 / 128 by default — TPU sublane/lane quanta; the 128 lane
-default is what the Pallas MTTKRP kernels' alignment assumption and the
-``auto`` backend's kernel-friendly check expect). Pass a smaller
+XLA needs static shapes. Subjects vary in row count I_k, nonzero-column
+count c_k, and nonzero count nnz_k; we group them into buckets whose padded
+geometry is chosen to bound padding waste while keeping the number of
+distinct compiled shapes small. Pad targets are rounded up to multiples of
+``row_align`` / ``col_align`` (8 / 128 by default — TPU sublane/lane quanta;
+the 128 lane default is what the Pallas MTTKRP kernels' alignment assumption
+and the ``auto`` backend's kernel-friendly check expect). Pass a smaller
 ``col_align`` explicitly for CPU-only runs where padding waste matters more
 than lane alignment.
+
+Two padding currencies, one per device format (repro.core.irregular):
+
+* **area** — the CC format densifies each slice over its kept columns, so a
+  bucket costs ``Kb * I_pad * C_pad`` cells regardless of the true nonzero
+  count. ``padding_waste`` measures this.
+* **nnz** — the SCOO format stores flat per-subject triplets padded to the
+  bucket's ``N_pad`` (``nnz_pads``), so a bucket costs ``Kb * N_pad``
+  entries. ``nnz_waste`` measures this; pass ``nnz_counts`` (and, for
+  SCOO-heavy data, ``sort_by="nnz"``) to plan it.
+
+``route_formats`` turns the per-bucket *density* — true nonzeros over the
+densified CC cell count, the quantity that decides which format is cheaper —
+into a per-bucket "cc"/"scoo" decision (the ``bucketize(format="auto")``
+router).
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["BucketPlan", "plan_buckets"]
+__all__ = ["BucketPlan", "plan_buckets", "route_formats",
+           "SCOO_DENSITY_THRESHOLD"]
+
+# Density below which the SCOO format wins over CC for a bucket: one SCOO
+# nonzero costs ~3 staged entries (val + row + col) and ~2 gathers per
+# contraction vs CC's 1 dense cell, so the crossover is well above 10%;
+# 0.25 keeps CC for near-dense buckets (where the MXU-shaped dense matmul
+# is unbeatable) and routes genuinely sparse buckets to the O(nnz) path.
+SCOO_DENSITY_THRESHOLD = 0.25
 
 
 def _round_up(x: int, align: int) -> int:
@@ -32,13 +54,17 @@ class BucketPlan:
     # per bucket: (I_pad, C_pad) and the member subject indices
     shapes: List[tuple]          # [(I_pad, C_pad)]
     members: List[np.ndarray]    # [int32 arrays of subject ids]
+    # per bucket: padded nonzero count N_pad (SCOO layout); None when the
+    # plan was built without nnz_counts
+    nnz_pads: Optional[List[int]] = None
 
     @property
     def n_buckets(self) -> int:
         return len(self.shapes)
 
     def padding_waste(self, row_counts: Sequence[int], col_counts: Sequence[int]) -> float:
-        """Fraction of padded cells that are padding (area metric)."""
+        """Fraction of padded cells that are padding (area metric — the CC
+        format's currency)."""
         used = 0
         total = 0
         for (ip, cp), mem in zip(self.shapes, self.members):
@@ -46,6 +72,52 @@ class BucketPlan:
                 used += int(row_counts[k]) * int(col_counts[k])
                 total += ip * cp
         return 1.0 - used / max(total, 1)
+
+    # -- nnz metrics (the SCOO format's currency + the format router's signal)
+    def bucket_nnz(self, nnz_counts: Sequence[int]) -> List[int]:
+        """True nonzero count per bucket."""
+        nz = np.asarray(nnz_counts, dtype=np.int64)
+        return [int(nz[mem].sum()) for mem in self.members]
+
+    def bucket_densities(self, nnz_counts: Sequence[int]) -> List[float]:
+        """Per-bucket density: true nonzeros over the densified CC cell count
+        ``n_members * I_pad * C_pad`` — the CC-vs-SCOO routing signal."""
+        return [
+            nnz / max(len(mem) * ip * cp, 1)
+            for (ip, cp), mem, nnz in zip(
+                self.shapes, self.members, self.bucket_nnz(nnz_counts))
+        ]
+
+    def nnz_waste(self, nnz_counts: Sequence[int]) -> float:
+        """Fraction of padded SCOO entries that are padding (needs a plan
+        built with ``nnz_counts`` so ``nnz_pads`` is populated)."""
+        if self.nnz_pads is None:
+            raise ValueError("plan has no nnz_pads; pass nnz_counts to "
+                             "plan_buckets to plan the SCOO layout")
+        used = sum(self.bucket_nnz(nnz_counts))
+        total = sum(npad * len(mem)
+                    for npad, mem in zip(self.nnz_pads, self.members))
+        return 1.0 - used / max(total, 1)
+
+    def stats(self, row_counts: Sequence[int], col_counts: Sequence[int],
+              nnz_counts: Sequence[int],
+              formats: Optional[Sequence[str]] = None) -> List[dict]:
+        """Per-bucket records (shape, members, nnz, density, chosen format) —
+        what ``decompose.py --json`` surfaces."""
+        out = []
+        nnzs = self.bucket_nnz(nnz_counts)
+        dens = self.bucket_densities(nnz_counts)
+        for i, ((ip, cp), mem) in enumerate(zip(self.shapes, self.members)):
+            rec = {
+                "i_pad": ip, "c_pad": cp, "n_subjects": len(mem),
+                "nnz": nnzs[i], "density": dens[i],
+            }
+            if self.nnz_pads is not None:
+                rec["nnz_pad"] = self.nnz_pads[i]
+            if formats is not None:
+                rec["format"] = formats[i]
+            out.append(rec)
+        return out
 
 
 def plan_buckets(
@@ -55,20 +127,42 @@ def plan_buckets(
     max_buckets: int = 4,
     row_align: int = 8,
     col_align: int = 128,
+    nnz_counts: Optional[Sequence[int]] = None,
+    nnz_align: int = 8,
+    sort_by: str = "area",
 ) -> BucketPlan:
-    """Greedy quantile bucketing on (I_k, c_k).
+    """Greedy quantile bucketing on (I_k, c_k[, nnz_k]).
 
-    Sort subjects by padded area and split into ``max_buckets`` contiguous
+    Sort subjects by padded cost and split into ``max_buckets`` contiguous
     groups of (roughly) equal count; each bucket pads to its member max.
     Simple, deterministic, and bounds waste well for the skewed long-tail
     distributions typical of EHR data.
+
+    ``sort_by`` picks the cost the quantiles equalize: ``"area"`` (I_k * c_k,
+    the CC format's padded-cell currency — the default) or ``"nnz"`` (the
+    SCOO format's padded-triplet currency; needs ``nnz_counts``). With
+    ``nnz_counts`` given, every bucket also gets its SCOO pad target
+    ``N_pad = round_up(max member nnz, nnz_align)`` in ``plan.nnz_pads``.
     """
     rc = np.asarray(row_counts, dtype=np.int64)
     cc = np.asarray(col_counts, dtype=np.int64)
     if rc.shape != cc.shape or rc.ndim != 1 or rc.size == 0:
         raise ValueError("row_counts/col_counts must be equal-length 1-D, non-empty")
+    nz = None
+    if nnz_counts is not None:
+        nz = np.asarray(nnz_counts, dtype=np.int64)
+        if nz.shape != rc.shape:
+            raise ValueError("nnz_counts must match row_counts in length")
+    if sort_by == "area":
+        key = rc * cc
+    elif sort_by == "nnz":
+        if nz is None:
+            raise ValueError("sort_by='nnz' needs nnz_counts")
+        key = nz
+    else:
+        raise ValueError(f"unknown sort_by {sort_by!r}; choose 'area' or 'nnz'")
     n = rc.size
-    order = np.argsort(rc * cc, kind="stable")
+    order = np.argsort(key, kind="stable")
     n_buckets = int(min(max_buckets, n))
     splits = np.array_split(order, n_buckets)
     shapes, members = [], []
@@ -88,4 +182,31 @@ def plan_buckets(
             merged[s] = m
     shapes = list(merged.keys())
     members = [merged[s] for s in shapes]
-    return BucketPlan(shapes=shapes, members=members)
+    nnz_pads = None
+    if nz is not None:
+        nnz_pads = [_round_up(int(nz[mem].max()), nnz_align) if mem.size else
+                    nnz_align for mem in members]
+    return BucketPlan(shapes=shapes, members=members, nnz_pads=nnz_pads)
+
+
+def route_formats(
+    plan: BucketPlan,
+    nnz_counts: Sequence[int],
+    *,
+    format: str = "auto",
+    density_threshold: float = SCOO_DENSITY_THRESHOLD,
+) -> List[str]:
+    """Per-bucket device-format decision for ``bucketize``.
+
+    ``format="cc"``/``"scoo"`` force every bucket; ``"auto"`` routes each
+    bucket by its measured density (true nonzeros over the densified CC cell
+    count): below ``density_threshold`` the O(nnz) SCOO path wins, at or
+    above it the dense-over-kept-columns CC matmuls do.
+    """
+    if format in ("cc", "scoo"):
+        return [format] * plan.n_buckets
+    if format != "auto":
+        raise ValueError(
+            f"unknown format {format!r}; choose from 'cc', 'scoo', 'auto'")
+    return ["scoo" if d < density_threshold else "cc"
+            for d in plan.bucket_densities(nnz_counts)]

@@ -66,6 +66,10 @@ class IrregularCOO:
     def col_counts(self) -> np.ndarray:
         return np.asarray([s.nonzero_cols().size for s in self.subjects], dtype=np.int32)
 
+    def nnz_counts(self) -> np.ndarray:
+        """Per-subject nonzero counts (the SCOO planner's padding currency)."""
+        return np.asarray([s.nnz for s in self.subjects], dtype=np.int64)
+
     def frobenius_sq(self) -> float:
         return float(sum(np.sum(np.square(s.vals, dtype=np.float64)) for s in self.subjects))
 

@@ -82,3 +82,57 @@ def test_from_dense_slices():
     data = from_dense_slices(slices)
     for s, X in zip(data.subjects, slices):
         np.testing.assert_allclose(s.to_dense(), X)
+
+
+def test_to_block_bucket_truncation_raises():
+    """max_blocks truncation drops nonzeros -> loud ValueError with the
+    dropped count by default; allow_truncate=True downgrades it to a
+    warning (the old behaviour was SILENT data loss)."""
+    # two subjects whose columns span 3 distinct LANE blocks each
+    data = random_irregular(n_subjects=2, n_cols=3 * LANE, max_rows=4,
+                            avg_nnz_per_subject=30, seed=9)
+    bt = bucketize(data, max_buckets=1, dtype=jnp.float64)
+    b = bt.buckets[0]
+    # untruncated conversion is clean (no exception, no warning)
+    to_block_bucket(b, data.n_cols)
+    with pytest.raises(ValueError, match=r"truncated \d+ nonzeros"):
+        to_block_bucket(b, data.n_cols, max_blocks=1)
+    with pytest.warns(UserWarning, match=r"truncated \d+ nonzeros"):
+        bb = to_block_bucket(b, data.n_cols, max_blocks=1, allow_truncate=True)
+    assert bb.vals.shape[2] == 1   # the cap was applied
+
+
+def test_bucketize_dtype_sweep():
+    """Staging-buffer dtype: f64 only for f64 requests; bf16/f16 stage in
+    f32 and cast once (the old check silently staged them in f64). Output
+    dtypes and values must match the f32-staged reference for every float."""
+    from repro.core.irregular import _staging_dtype
+
+    assert _staging_dtype(jnp.float64) == np.float64
+    for dt in (jnp.float32, jnp.bfloat16, jnp.float16):
+        assert _staging_dtype(dt) == np.float32
+
+    data = random_irregular(n_subjects=6, n_cols=23, max_rows=7,
+                            avg_nnz_per_subject=14, seed=4)
+    # one shared plan so cc/scoo buckets align with the reference
+    plan = plan_buckets(data.row_counts(), data.col_counts(),
+                        nnz_counts=data.nnz_counts(), max_buckets=2,
+                        col_align=4)
+    ref = bucketize(data, dtype=jnp.float32, plan=plan)
+    for fmt in ("cc", "scoo"):
+        for dt in (jnp.float16, jnp.bfloat16, jnp.float32, jnp.float64):
+            bt = bucketize(data, dtype=dt, plan=plan,
+                           formats=[fmt] * plan.n_buckets)
+            for b, rb in zip(bt.buckets, ref.buckets):
+                assert b.vals.dtype == jnp.dtype(dt)
+                assert b.col_mask.dtype == jnp.dtype(dt)
+                # values survive the round-trip at the dtype's precision
+                dense = (b.vals if fmt == "cc"
+                         else b.dense_vals()).astype(jnp.float64)
+                ref_vals = np.asarray(rb.vals, dtype=np.float64)
+                # the reference itself is f32, so never expect better than f32
+                tol = max(float(jnp.finfo(dt).eps),
+                          float(jnp.finfo(jnp.float32).eps))
+                np.testing.assert_allclose(
+                    np.asarray(dense), ref_vals,
+                    rtol=2 * tol, atol=2 * tol * max(abs(ref_vals).max(), 1))

@@ -1,0 +1,352 @@
+"""SCOO-vs-CC parity suite: the O(nnz) sparse execution path must be a pure
+performance/memory knob. The same bucket plan is materialized in both device
+formats and every per-iteration stage — X_k V, the projection Y_k = Q^T X_k,
+all three MTTKRP modes, ykv, and whole decompositions under every engine and
+an ADMM-routed constraint — must agree (f64, tight tolerances; host-vs-scan
+bitwise on SCOO). Also covers the CC-vs-SCOO auto-router's decisions and the
+Pallas scalar-prefetch kernels in interpret mode."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Parafac2Options, SparseBucket, Bucket, bucket_format, bucketize, fit)
+from repro.core import spartan
+from repro.core.backend import get_backend
+from repro.kernels import scoo as kscoo
+from repro.data import choa_like
+from repro.sparse import (
+    IrregularCOO, SubjectCOO, plan_buckets, random_irregular, route_formats)
+
+TOL = dict(rtol=0, atol=1e-10)
+
+
+def _subject(rng, n_rows, n_cols, nnz):
+    """One subject with exactly `nnz` distinct nonzero cells."""
+    cells = rng.choice(n_rows * n_cols, size=nnz, replace=False)
+    return SubjectCOO(
+        rows=(cells // n_cols).astype(np.int32),
+        cols=(cells % n_cols).astype(np.int32),
+        vals=rng.standard_normal(nnz),
+        n_rows=n_rows, n_cols=n_cols)
+
+
+def _edge_data(n_cols=29):
+    """Odd/unaligned geometry with an empty subject, a single-nnz subject,
+    and an ultra-sparse tall subject alongside ordinary ones."""
+    rng = np.random.default_rng(7)
+    subs = [
+        _subject(rng, 9, n_cols, 25),
+        SubjectCOO(rows=np.zeros(0, np.int32), cols=np.zeros(0, np.int32),
+                   vals=np.zeros(0), n_rows=3, n_cols=n_cols),   # empty
+        _subject(rng, 1, n_cols, 1),                             # single nnz
+        _subject(rng, 200, n_cols, 5),                           # ultra-sparse
+        _subject(rng, 13, n_cols, 40),
+        _subject(rng, 6, n_cols, 11),
+    ]
+    return IrregularCOO(subjects=subs, n_cols=n_cols)
+
+
+DATASETS = {
+    "edge": _edge_data,
+    "random-odd": lambda: random_irregular(
+        n_subjects=13, n_cols=37, max_rows=9, avg_nnz_per_subject=18,
+        seed=0, nonneg=False),
+    "random-padded": lambda: random_irregular(
+        n_subjects=11, n_cols=50, max_rows=12, avg_nnz_per_subject=25,
+        seed=3),
+}
+
+
+def _pair(data, *, max_buckets=3, col_align=4, subject_align=1,
+          dtype=jnp.float64):
+    """The SAME bucket plan in both formats -> aligned bucket pairs."""
+    plan = plan_buckets(data.row_counts(), data.col_counts(),
+                        nnz_counts=data.nnz_counts(), max_buckets=max_buckets,
+                        col_align=col_align)
+    kw = dict(dtype=dtype, plan=plan, subject_align=subject_align)
+    cc = bucketize(data, formats=["cc"] * plan.n_buckets, **kw)
+    sc = bucketize(data, formats=["scoo"] * plan.n_buckets, **kw)
+    return cc, sc
+
+
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_stage_parity(name):
+    """Every SCOO contraction against its CC counterpart, bucket by bucket."""
+    data = DATASETS[name]()
+    cc, sc = _pair(data)
+    rng = np.random.default_rng(1)
+    R = 5
+    V = jnp.asarray(rng.standard_normal((data.n_cols, R)))
+    H = jnp.asarray(rng.standard_normal((R, R)))
+    for bc, bs in zip(cc.buckets, sc.buckets):
+        assert isinstance(bs, SparseBucket) and isinstance(bc, Bucket)
+        assert (bs.kb, bs.i_pad, bs.c_pad) == (bc.kb, bc.i_pad, bc.c_pad)
+        np.testing.assert_array_equal(np.asarray(bs.cols), np.asarray(bc.cols))
+        np.testing.assert_allclose(np.asarray(bs.dense_vals()),
+                                   np.asarray(bc.vals), **TOL)
+        Q = jnp.asarray(rng.standard_normal((bc.kb, bc.i_pad, R)))
+        Wb = jnp.asarray(rng.standard_normal((bc.kb, R)))
+        # formation stages
+        np.testing.assert_allclose(np.asarray(bs.xk_times_v(V)),
+                                   np.asarray(bc.xk_times_v(V)), **TOL)
+        Yc_cc = bc.project(Q)
+        np.testing.assert_allclose(np.asarray(bs.project(Q)),
+                                   np.asarray(Yc_cc), **TOL)
+        # native (Yc-free) MTTKRP stages vs the spartan reference on CC's Yc
+        Vg = bc.gather_v(V)
+        ykv_ref = jnp.einsum("krc,kcl->krl", Yc_cc, Vg)
+        np.testing.assert_allclose(
+            np.asarray(kscoo.ykv_scoo(bs.vals, bs.rows, bs.lcols, Q, Vg)),
+            np.asarray(ykv_ref), **TOL)
+        np.testing.assert_allclose(
+            np.asarray(kscoo.mode1_scoo(bs.vals, bs.rows, bs.lcols, Q, Vg,
+                                        Wb, bs.subject_mask)),
+            np.asarray(spartan.mode1_bucket(Yc_cc, Vg, Wb, bc.subject_mask)),
+            **TOL)
+        np.testing.assert_allclose(
+            np.asarray(kscoo.mode2_compact_scoo(
+                bs.vals, bs.rows, bs.lcols, Q, H, Wb, bs.col_mask,
+                bs.subject_mask, cperm=bs.cperm, col_ends=bs.col_ends)),
+            np.asarray(spartan.mode2_bucket_compact(
+                Yc_cc, H, Wb, bc.col_mask, bc.subject_mask)), **TOL)
+        np.testing.assert_allclose(
+            np.asarray(kscoo.mode3_scoo(bs.vals, bs.rows, bs.lcols, Q, Vg, H,
+                                        bs.subject_mask)),
+            np.asarray(spartan.mode3_bucket(Yc_cc, Vg, H, bc.subject_mask)),
+            **TOL)
+
+
+def test_sorted_boundary_matches_scatter_oracle():
+    """The cumsum/boundary segment-sums against the order-independent
+    scatter-add fallback (ends=None)."""
+    data = DATASETS["edge"]()
+    _, sc = _pair(data)
+    rng = np.random.default_rng(2)
+    R = 4
+    V = jnp.asarray(rng.standard_normal((data.n_cols, R)))
+    for b in sc.buckets:
+        Vg = b.gather_v(V)
+        Q = jnp.asarray(rng.standard_normal((b.kb, b.i_pad, R)))
+        np.testing.assert_allclose(
+            np.asarray(kscoo.xk_times_v(b.vals, b.rows, b.lcols, Vg, b.i_pad,
+                                        row_ends=b.row_ends)),
+            np.asarray(kscoo.xk_times_v(b.vals, b.rows, b.lcols, Vg,
+                                        b.i_pad)), rtol=0, atol=1e-12)
+        np.testing.assert_allclose(
+            np.asarray(kscoo.project(b.vals, b.rows, b.lcols, Q, b.c_pad,
+                                     cperm=b.cperm, col_ends=b.col_ends)),
+            np.asarray(kscoo.project(b.vals, b.rows, b.lcols, Q, b.c_pad)),
+            rtol=0, atol=1e-12)
+
+
+@pytest.fixture(scope="module")
+def choa_small():
+    return choa_like(scale=5e-5, seed=0)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "scoo", "auto"])
+def test_fit_parity_backends(choa_small, backend):
+    """Whole-decomposition parity: SCOO final fit within 1e-8 of the CC/jnp
+    reference (f64, the acceptance-criterion command shape)."""
+    cc, sc = _pair(choa_small, max_buckets=2, col_align=128)
+    opts_cc = Parafac2Options(rank=5, nonneg=True, dtype=jnp.float64,
+                              backend="jnp")
+    opts_sc = Parafac2Options(rank=5, nonneg=True, dtype=jnp.float64,
+                              backend=backend)
+    _, h_cc = fit(cc, opts_cc, max_iters=20, tol=0.0, seed=0)
+    _, h_sc = fit(sc, opts_sc, max_iters=20, tol=0.0, seed=0)
+    np.testing.assert_allclose(h_sc, h_cc, rtol=0, atol=1e-8)
+
+
+def test_fit_parity_admm_constraint(choa_small):
+    """One ADMM-routed constraint through the SCOO path (dual state carried
+    in aux, engines untouched)."""
+    cc, sc = _pair(choa_small, max_buckets=2, col_align=128)
+    kw = dict(rank=3, dtype=jnp.float64,
+              constraints={"v": "nonneg_admm", "w": "nonneg_admm"})
+    _, h_cc = fit(cc, Parafac2Options(backend="jnp", **kw),
+                  max_iters=15, tol=0.0, seed=0)
+    for backend in ("jnp", "auto"):
+        _, h_sc = fit(sc, Parafac2Options(backend=backend, **kw),
+                      max_iters=15, tol=0.0, seed=0)
+        np.testing.assert_allclose(h_sc, h_cc, rtol=0, atol=1e-8)
+
+
+@pytest.mark.parametrize("engine,atol", [("scan", 0.0), ("mesh", 1e-8)])
+def test_engine_parity_scoo(choa_small, engine, atol):
+    """host vs scan bitwise on SCOO (scan closes over the data like the host
+    jit); mesh to eps (shard_map compiles the step differently)."""
+    _, sc = _pair(choa_small, max_buckets=2, col_align=128,
+                  subject_align=len(jax.devices()))
+    kw = dict(rank=3, nonneg=True, dtype=jnp.float64, backend="auto",
+              check_every=4)
+    _, h_host = fit(sc, Parafac2Options(engine="host", **kw),
+                    max_iters=12, tol=0.0, seed=0)
+    _, h_dev = fit(sc, Parafac2Options(engine=engine, **kw),
+                   max_iters=12, tol=0.0, seed=0)
+    if atol == 0.0:
+        np.testing.assert_array_equal(h_dev, h_host)
+    else:
+        np.testing.assert_allclose(h_dev, h_host, rtol=0, atol=atol)
+
+
+def test_fit_parity_bucketed_w(choa_small):
+    """The bucketed W layout rides the SCOO path unchanged."""
+    cc, sc = _pair(choa_small, max_buckets=2, col_align=128)
+    kw = dict(rank=3, nonneg=True, dtype=jnp.float64, w_layout="bucketed")
+    _, h_cc = fit(cc, Parafac2Options(backend="jnp", **kw),
+                  max_iters=10, tol=0.0, seed=0)
+    _, h_sc = fit(sc, Parafac2Options(backend="auto", **kw),
+                  max_iters=10, tol=0.0, seed=0)
+    np.testing.assert_allclose(h_sc, h_cc, rtol=0, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# auto-router decisions
+# ---------------------------------------------------------------------------
+
+def test_route_formats_by_density():
+    rng = np.random.default_rng(0)
+    # fully dense 8x8 blocks (density 1.0 over their kept columns) +
+    # ultra-sparse tall subjects: the router must split them
+    def dense_block():
+        r, c = np.meshgrid(np.arange(8), np.arange(8), indexing="ij")
+        return SubjectCOO(rows=r.ravel().astype(np.int32),
+                          cols=c.ravel().astype(np.int32),
+                          vals=rng.standard_normal(64), n_rows=8, n_cols=64)
+    subs = ([dense_block() for _ in range(4)]
+            + [_subject(rng, 180, 64, 6) for _ in range(4)])
+    data = IrregularCOO(subjects=subs, n_cols=64)
+    plan = plan_buckets(data.row_counts(), data.col_counts(),
+                        nnz_counts=data.nnz_counts(), max_buckets=2,
+                        col_align=4)
+    dens = plan.bucket_densities(data.nnz_counts())
+    fmts = route_formats(plan, data.nnz_counts(), format="auto",
+                         density_threshold=0.25)
+    for d, f in zip(dens, fmts):
+        assert f == ("scoo" if d < 0.25 else "cc")
+    assert set(fmts) == {"cc", "scoo"}   # the geometry really is mixed
+    # forcing wins over density
+    assert route_formats(plan, data.nnz_counts(), format="cc") == ["cc"] * 2
+    assert route_formats(plan, data.nnz_counts(), format="scoo") == ["scoo"] * 2
+    with pytest.raises(ValueError, match="unknown format"):
+        route_formats(plan, data.nnz_counts(), format="bogus")
+    # bucketize(format="auto") materializes exactly the routed classes
+    bt = bucketize(data, max_buckets=2, col_align=4, format="auto")
+    assert [bucket_format(b) for b in bt.buckets] == fmts
+
+
+def test_plan_nnz_stats():
+    data = DATASETS["random-odd"]()
+    nnzc = data.nnz_counts()
+    plan = plan_buckets(data.row_counts(), data.col_counts(),
+                        nnz_counts=nnzc, max_buckets=3, col_align=4,
+                        sort_by="nnz")
+    assert plan.nnz_pads is not None
+    for npad, mem in zip(plan.nnz_pads, plan.members):
+        assert npad >= int(nnzc[mem].max())
+        assert npad % 8 == 0
+    assert 0.0 <= plan.nnz_waste(nnzc) < 1.0
+    assert sum(plan.bucket_nnz(nnzc)) == data.nnz
+    stats = plan.stats(data.row_counts(), data.col_counts(), nnzc,
+                       formats=["scoo"] * plan.n_buckets)
+    assert all(s["format"] == "scoo" and "density" in s and "nnz_pad" in s
+               for s in stats)
+    with pytest.raises(ValueError, match="sort_by='nnz'"):
+        plan_buckets(data.row_counts(), data.col_counts(), sort_by="nnz")
+
+
+def test_mixed_format_fit_runs(choa_small):
+    """A Bucketed that genuinely mixes CC and SCOO buckets fits fine."""
+    data = choa_small
+    plan = plan_buckets(data.row_counts(), data.col_counts(),
+                        nnz_counts=data.nnz_counts(), max_buckets=2)
+    bt = bucketize(data, dtype=jnp.float64, plan=plan, formats=["cc", "scoo"])
+    assert [bucket_format(b) for b in bt.buckets] == ["cc", "scoo"]
+    _, hist = fit(bt, Parafac2Options(rank=3, nonneg=True, dtype=jnp.float64,
+                                      backend="auto"),
+                  max_iters=5, tol=0.0, seed=0)
+    assert len(hist) == 5 and np.isfinite(hist).all()
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+def test_pallas_scoo_kernels_interpret():
+    data = DATASETS["edge"]()
+    _, sc = _pair(data, dtype=jnp.float32)
+    rng = np.random.default_rng(5)
+    R = 4
+    V = jnp.asarray(rng.standard_normal((data.n_cols, R)), jnp.float32)
+    for b in sc.buckets:
+        Vg = b.gather_v(V)
+        Q = jnp.asarray(rng.standard_normal((b.kb, b.i_pad, R)), jnp.float32)
+        ref_x = kscoo.xk_times_v(b.vals, b.rows, b.lcols, Vg, b.i_pad,
+                                 row_ends=b.row_ends)
+        pal_x = kscoo.xk_times_v(b.vals, b.rows, b.lcols, Vg, b.i_pad,
+                                 use_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(pal_x), np.asarray(ref_x),
+                                   rtol=1e-4, atol=1e-4)
+        ref_p = kscoo.project(b.vals, b.rows, b.lcols, Q, b.c_pad,
+                              cperm=b.cperm, col_ends=b.col_ends)
+        pal_p = kscoo.project(b.vals, b.rows, b.lcols, Q, b.c_pad,
+                              use_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(pal_p), np.asarray(ref_p),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_backend_scoo_buckets():
+    """PallasBackend's bucket-level stages route SCOO buckets through the
+    Pallas segment-sum kernels and agree with the jnp route (f32)."""
+    data = DATASETS["random-padded"]()
+    _, sc = _pair(data, dtype=jnp.float32)
+    rng = np.random.default_rng(6)
+    R = 4
+    V = jnp.asarray(rng.standard_normal((data.n_cols, R)), jnp.float32)
+    pal, ref = get_backend("pallas"), get_backend("jnp")
+    for b in sc.buckets:
+        np.testing.assert_allclose(np.asarray(pal.xkv_bucket(b, V)),
+                                   np.asarray(ref.xkv_bucket(b, V)),
+                                   rtol=1e-4, atol=1e-4)
+        Q = jnp.asarray(rng.standard_normal((b.kb, b.i_pad, R)), jnp.float32)
+        np.testing.assert_allclose(np.asarray(pal.project_bucket(b, Q)),
+                                   np.asarray(ref.project_bucket(b, Q)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_nnz_offsets_uniform():
+    _, sc = _pair(DATASETS["edge"]())
+    for b in sc.buckets:
+        np.testing.assert_array_equal(
+            np.asarray(b.nnz_offsets),
+            np.arange(b.kb, dtype=np.int32) * b.n_pad)
+
+
+def test_pallas_block_skip_explicit_zero_values():
+    """Explicit zero-VALUED triplets are legal; the Pallas block-skip must
+    key on the true nnz_counts (or skip nothing), never on vals != 0 —
+    counting values would drop real entries that follow a stored zero."""
+    Kb, N, I, C, R = 1, 4, 4, 4, 2
+    vals = jnp.asarray([[0.0, 0.0, 2.0, 3.0]], jnp.float32)
+    rows = jnp.asarray([[0, 0, 1, 2]], jnp.int32)
+    lcols = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    Vg = jnp.ones((Kb, C, R), jnp.float32)
+    ref = kscoo.xk_times_v(vals, rows, lcols, Vg, I)
+    assert float(jnp.abs(ref).sum()) > 0
+    for nnz_counts in (None, jnp.asarray([4], jnp.int32)):
+        out = kscoo.xk_times_v(vals, rows, lcols, Vg, I,
+                               nnz_counts=nnz_counts, use_pallas=True,
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+    Q = jnp.ones((Kb, I, R), jnp.float32)
+    ref_p = kscoo.project(vals, rows, lcols, Q, C)
+    for nnz_counts in (None, jnp.asarray([4], jnp.int32)):
+        out_p = kscoo.project(vals, rows, lcols, Q, C,
+                              nnz_counts=nnz_counts, use_pallas=True,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(ref_p),
+                                   rtol=1e-6, atol=1e-6)
