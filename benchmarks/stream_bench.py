@@ -1,0 +1,139 @@
+"""Streaming-append benchmark: per-append serving latency + throughput.
+
+The batch benchmarks (`als_e2e.py`) time whole decompositions; the serving
+workload (`launch/stream.py`) is different — it pays one padded, jitted
+``update_subjects`` dispatch per request batch against FIXED factors, and
+what matters is the tail of the per-append latency distribution plus the
+sustained append throughput. This benchmark streams a synthetic append
+workload through a warm-started :class:`repro.launch.stream.StreamService`
+and reports, per device format:
+
+  ``append/<fmt>``: ``p50_us_per_call`` / ``p99_us_per_call`` (per-append
+  wall latency; GATED lower-better by `benchmarks/compare.py`, which keys on
+  the ``us_per_call`` suffix), ``subjects_per_s`` (sustained appends per
+  second of dispatch wall time, informational), and the append/batch counts.
+  ``refit/<fmt>``: wall seconds of one full drift refit over the accumulated
+  union (informational — refits are rare by design).
+
+The service's sticky batch geometry is pre-grown to cover the whole stream
+(a production deployment provisions its padded rectangle up front), so after
+the first compiled batch every dispatch reuses one jit entry; the first
+``--warmup-batches`` batches are excluded from the latency distribution.
+
+  PYTHONPATH=src python -m benchmarks.stream_bench --warm 24 --appends 48 \
+      --rank 4 --batch-slots 8 --formats cc,scoo --json BENCH_stream.json
+
+The JSON artifact is a `compare.py` namespace (``stream``); CI gates it
+against the checked-in baseline and appends it to BENCH_trajectory.jsonl.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Parafac2Options
+from repro.sparse import random_irregular
+from repro.launch.stream import StreamService, synthetic_stream, validate_payload
+from benchmarks.common import calibrate, emit
+
+
+def _bench_format(fmt: str, args) -> dict:
+    data = random_irregular(
+        n_subjects=args.warm + args.appends, n_cols=args.cols,
+        max_rows=args.max_rows, avg_nnz_per_subject=args.avg_nnz,
+        seed=args.seed)
+    warm, payloads = synthetic_stream(
+        data, warm_frac=args.warm / (args.warm + args.appends),
+        touch_frac=args.touch_frac, seed=args.seed)
+    opts = Parafac2Options(rank=args.rank, dtype=jnp.float32)
+    svc, _ = StreamService.warm_start(
+        warm, opts, iters=args.warm_iters, seed=args.seed,
+        batch_slots=args.batch_slots, drift_threshold=np.inf, format=fmt)
+
+    # provision the padded rectangle for the WHOLE stream up front so every
+    # post-warmup batch reuses the same compiled dispatch
+    blocks = [validate_payload(p, warm.n_cols, len(svc.subjects))[1]
+              for p in payloads]
+    svc._batch_geometry(blocks)
+
+    for p in payloads:
+        svc.submit(p)
+    svc.flush()
+
+    skip = min(args.warmup_batches, max(svc.n_batches - 1, 0))
+    lat = np.asarray(svc.batch_latencies[skip:], dtype=np.float64)
+    n, bs = svc.n_appends, args.batch_slots
+    sizes = np.asarray([bs] * (n // bs) + ([n % bs] if n % bs else []))
+    # per-append latency = the batch's wall time (each request rides one
+    # dispatch); the distribution is over appends, weighted by batch size
+    per_append = np.repeat(lat, sizes[skip:][: lat.size])
+    busy = float(lat.sum())
+    row = {
+        "p50_us_per_call": float(np.percentile(per_append, 50) * 1e6),
+        "p99_us_per_call": float(np.percentile(per_append, 99) * 1e6),
+        "subjects_per_s": (per_append.size / busy) if busy > 0 else 0.0,
+        "appends": int(per_append.size),
+        "batches": int(lat.size),
+        "compiled_geometries": svc.stats()["compiled_geometries"],
+    }
+
+    t0 = time.perf_counter()
+    svc.refit(mode="warm")
+    refit_s = time.perf_counter() - t0
+    return row, {"refit_seconds": refit_s,
+                 "n_subjects": len(svc.subjects),
+                 "stream_fit": svc.stream_fit}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--warm", type=int, default=24,
+                    help="subjects in the warm-start population")
+    ap.add_argument("--appends", type=int, default=48,
+                    help="append requests to stream")
+    ap.add_argument("--cols", type=int, default=512)
+    ap.add_argument("--max-rows", type=int, default=64)
+    ap.add_argument("--avg-nnz", type=float, default=96.0)
+    ap.add_argument("--rank", type=int, default=4)
+    ap.add_argument("--warm-iters", type=int, default=10)
+    ap.add_argument("--batch-slots", type=int, default=8)
+    ap.add_argument("--touch-frac", type=float, default=0.25)
+    ap.add_argument("--formats", default="cc,scoo",
+                    help="comma list from cc,scoo,auto")
+    ap.add_argument("--warmup-batches", type=int, default=2,
+                    help="leading batches excluded from the latency "
+                         "distribution (compile + cache warmup)")
+    ap.add_argument("--json", default="",
+                    help="write the compare.py namespace to this JSON file")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    results = {"config": {
+        "warm": args.warm, "appends": args.appends, "cols": args.cols,
+        "rank": args.rank, "batch_slots": args.batch_slots,
+        "platform": jax.default_backend(), "calib_seconds": calibrate(),
+    }}
+    for fmt in [s.strip() for s in args.formats.split(",") if s.strip()]:
+        row, refit = _bench_format(fmt, args)
+        results[f"append/{fmt}"] = row
+        results[f"refit/{fmt}"] = refit
+        emit(f"stream/append/{fmt}/p50", row["p50_us_per_call"] / 1e6,
+             f"p99={row['p99_us_per_call']:.0f}us "
+             f"{row['subjects_per_s']:.1f}subj/s")
+        emit(f"stream/refit/{fmt}", refit["refit_seconds"],
+             f"K={refit['n_subjects']}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.json}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

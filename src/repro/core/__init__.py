@@ -17,8 +17,11 @@ from repro.core.parafac2 import (
     fit,
     init_state,
     reconstruct_uk,
+    update_subjects,
+    w_global,
 )
-from repro.core.engine import ENGINES, fit_device, make_als_chunk, make_als_while
+from repro.core.engine import (
+    ENGINES, fit_device, make_als_chunk, make_als_while, make_subject_update)
 
 __all__ = [
     "Constraint",
@@ -46,5 +49,8 @@ __all__ = [
     "als_step",
     "fit",
     "init_state",
+    "make_subject_update",
     "reconstruct_uk",
+    "update_subjects",
+    "w_global",
 ]

@@ -61,7 +61,7 @@ from repro.core import parafac2 as p2
 from repro.dist import sharding as dsh
 
 __all__ = ["ENGINES", "als_chunk_fn", "fit_device", "make_als_chunk",
-           "make_als_while", "mesh_wrap"]
+           "make_als_while", "make_subject_update", "mesh_wrap"]
 
 ENGINES = ("host", "scan", "mesh")
 
@@ -261,6 +261,29 @@ def _compile(fn, data, opts, *, donate: Optional[bool]) -> Callable:
     jitted = jax.jit(lambda s: fn(data, s),
                      donate_argnums=_donate(donate, argnum=0))
     return lambda s: jitted(s)
+
+
+def make_subject_update(opts: "p2.Parafac2Options", *, smooth_lam: float = 0.0,
+                        inner_iters: int = 1) -> Callable:
+    """Compiled ``(batch, H, V, w_init, w_prev, prev_mask) -> (W, resid)``
+    incremental-subject dispatch (:func:`repro.core.parafac2.update_subjects`).
+
+    Unlike the fitting chunks, the DATA is a runtime argument here: the
+    streaming service re-dispatches the same compiled program on every
+    request batch, so the batch must not be baked in as a constant. jit's
+    cache keys on the batch pytree structure + shapes — a service that pins
+    its batch geometry (``repro.sparse.bucketing.fixed_plan`` + constant
+    ``Bucketed`` aux metadata) compiles exactly once per (geometry, format)
+    and every later flush is a cache hit.
+    """
+
+    def f(batch, H, V, w_init, w_prev, prev_mask):
+        return p2.update_subjects(
+            batch, H, V, opts, w_init=w_init, w_prev=w_prev,
+            prev_mask=prev_mask, smooth_lam=smooth_lam,
+            inner_iters=inner_iters)
+
+    return jax.jit(f)
 
 
 # ---------------------------------------------------------------------------

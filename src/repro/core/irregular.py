@@ -138,6 +138,12 @@ class Bucket:
         """
         return jnp.einsum("kir,kic->krc", Q, self.vals, preferred_element_type=self.vals.dtype)
 
+    def sq_norms(self) -> jax.Array:
+        """Per-subject ||X_k||_F^2 [Kb] (padding slots contribute 0) — the
+        streaming update path's residual bookkeeping needs the norm per
+        subject, not just the dataset-wide ``Bucketed.norm_sq``."""
+        return jnp.sum(self.vals * self.vals, axis=(1, 2))
+
     def scatter_cols_to_dense(self, compact: jax.Array, J: int) -> jax.Array:
         """Expand a CC matrix [Kb, *, C_pad] back to dense [Kb, *, J] (tests)."""
         Kb, mid, Cp = compact.shape
@@ -261,6 +267,11 @@ class SparseBucket:
 
         return scoo.project(self.vals, self.rows, self.lcols, Q, self.c_pad,
                             cperm=self.cperm, col_ends=self.col_ends)
+
+    def sq_norms(self) -> jax.Array:
+        """Per-subject ||X_k||_F^2 [Kb] — pad triplets are 0-valued, so the
+        flat sum needs no masking (same contract as :meth:`Bucket.sq_norms`)."""
+        return jnp.sum(self.vals * self.vals, axis=1)
 
     def dense_vals(self) -> jax.Array:
         """Materialize the CC vals rectangle [Kb, I_pad, C_pad] (tests)."""

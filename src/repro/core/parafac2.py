@@ -44,7 +44,7 @@ from repro.core.procrustes import solve_q
 from repro.dist.sharding import psum_subjects
 
 __all__ = ["Parafac2State", "Parafac2Options", "constraints_for", "init_state",
-           "als_step", "fit", "reconstruct_uk", "w_global"]
+           "als_step", "fit", "reconstruct_uk", "update_subjects", "w_global"]
 
 
 class Parafac2State(NamedTuple):
@@ -366,6 +366,121 @@ def fit(
             break
         prev = f
     return state, history
+
+
+def update_subjects(
+    batch: Bucketed,
+    H: jax.Array,
+    V: jax.Array,
+    opts: Parafac2Options,
+    *,
+    w_init: Optional[jax.Array] = None,
+    w_prev: Optional[jax.Array] = None,
+    prev_mask: Optional[jax.Array] = None,
+    smooth_lam: float = 0.0,
+    inner_iters: int = 1,
+) -> Tuple[jax.Array, jax.Array]:
+    """Incremental per-subject solve with the factors ``H``/``V`` FIXED.
+
+    This is the streaming/serving entry point (ROADMAP item 1, the tPARAFAC2
+    append workload): given a fitted model, a new or touched subject only
+    needs its own Procrustes basis ``Q_k`` and its own W row — both
+    independent across subjects, so a request batch is ONE padded, jitted
+    dispatch. Per inner iteration (all batched over subjects, per bucket,
+    through the same bucket-level backend stages ``als_step`` uses — the
+    CC/SCOO format split is free):
+
+      1. ``B_k = X_k V S_k H^T``, ``Q_k = polar(B_k)``   (Procrustes at the
+         current w_k; ``w_init`` on the first pass),
+      2. ``G_k = Y_k V`` and the mode-3 MTTKRP row, then the W-row solve
+         through ``opts``' "w" constraint — exactly the ``als_step`` stage-3c
+         update (with ``smooth_lam == 0`` and ``inner_iters == 1`` this IS
+         that stage, on a batch holding only the touched subjects).
+
+    ``smooth_lam > 0`` adds the tPARAFAC2-style temporal anchor
+    ``lam * ||w_k - w_k^prev||^2`` for subjects with a previous row
+    (``prev_mask``): a quadratic penalty folds EXACTLY into the normal
+    equations (``M += lam w_prev``, ``A += lam I``), so every solver route
+    (ridge/HALS/ADMM) stays exact — but ``A`` becomes per-subject, so that
+    branch solves rows under ``vmap``. New subjects (mask 0) are unpenalized.
+
+    ADMM-routed W constraints start from fresh duals here (requests are
+    independent one-shot solves; there is no outer ALS loop to warm-start
+    across) — raise ``opts.admm_iters`` if a tight ADMM solve matters.
+
+    Returns ``(W_rows [batch.n_subjects, R], resid [batch.n_subjects])``
+    where ``resid[k] = ||X_k - Q_k H S_k V^T||_F^2`` at the returned row
+    (same algebra as the ``als_step`` fit, per subject) — the streaming
+    service's drift tracker sums these into an exact union-dataset fit.
+    Jit-compatible; compile once per batch geometry via
+    :func:`repro.core.engine.make_subject_update`.
+    """
+    if inner_iters < 1:
+        raise ValueError(f"inner_iters must be >= 1, got {inner_iters}")
+    R = opts.rank
+    be = get_backend(opts.backend)
+    cons_w = constraints_for(opts)["w"]
+    solve_kw = dict(nnls_sweeps=opts.nnls_sweeps, admm_iters=opts.admm_iters)
+    VtV = V.T @ V
+    Phi = H.T @ H
+    gram3 = VtV * Phi                                     # [R, R]
+
+    if w_init is None:
+        w_init = jnp.ones((batch.n_subjects, R), opts.dtype)
+    if w_prev is None:
+        w_prev = jnp.zeros((batch.n_subjects, R), opts.dtype)
+    if prev_mask is None:
+        prev_mask = jnp.zeros((batch.n_subjects,), opts.dtype)
+
+    def _row_solve(rows, wb, prevb, pmaskb):
+        """The stage-3c W solve for one bucket's rows [Kb, R]."""
+        if smooth_lam <= 0.0:
+            wn, _ = cons_w.update(rows.astype(wb.dtype), gram3, wb, (),
+                                  **solve_kw)
+            return wn
+        # temporal anchor: per-subject lam_k = smooth_lam * has_prev, folded
+        # into the normal equations -> per-subject Gram, vmapped row solves
+        lam_k = jnp.asarray(smooth_lam, wb.dtype) * pmaskb        # [Kb]
+        M = rows.astype(wb.dtype) + lam_k[:, None] * prevb        # [Kb, R]
+        eye = jnp.eye(R, dtype=wb.dtype)
+        A = gram3.astype(wb.dtype)[None] + lam_k[:, None, None] * eye  # [Kb,R,R]
+
+        def one(m, a, w0):
+            x, _ = cons_w.update(m[None, :], a, w0[None, :], (), **solve_kw)
+            return x[0]
+
+        return jax.vmap(one)(M, A, prevb * pmaskb[:, None] +
+                             wb * (1.0 - pmaskb)[:, None])
+
+    # maintain the batch rows as a per-bucket tuple (the _w_rows layout)
+    wbs = [jnp.take(w_init, b.subject_ids, axis=0) * b.subject_mask[:, None]
+           for b in batch.buckets]
+    Gs: List[jax.Array] = [None] * len(batch.buckets)
+    for _ in range(inner_iters):
+        Wt = tuple(wbs)
+        for i, b in enumerate(batch.buckets):
+            proj, _, _ = _procrustes_project(b, H, V, Wt, opts, i, be)
+            G = be.ykv_bucket(b, proj, V)                 # [Kb, R, R]
+            Gs[i] = G
+            rows = be.mode3_bucket(b, proj, H, YkV=G)     # [Kb, R]
+            prevb = jnp.take(w_prev, b.subject_ids, axis=0)
+            pmaskb = jnp.take(prev_mask, b.subject_ids, axis=0) * b.subject_mask
+            wbs[i] = _row_solve(rows, wbs[i], prevb, pmaskb) \
+                * b.subject_mask[:, None]
+
+    # per-subject residual at the final rows (Q from the last Procrustes —
+    # the same staleness convention as the als_step fit)
+    W_out = jnp.zeros((batch.n_subjects, R), opts.dtype)
+    resid = jnp.zeros((batch.n_subjects,), opts.dtype)
+    for b, wb, G in zip(batch.buckets, wbs, Gs):
+        sq = b.sq_norms().astype(opts.dtype)
+        cross = jnp.einsum("rl,krl,kl->k", H, G, wb).astype(opts.dtype)
+        model = jnp.einsum("rl,rl,kr,kl->k", Phi, VtV, wb, wb).astype(opts.dtype)
+        rb = (sq - 2.0 * cross + model) * b.subject_mask.astype(opts.dtype)
+        W_out = W_out.at[b.subject_ids].add(
+            wb.astype(opts.dtype) * b.subject_mask[:, None].astype(opts.dtype))
+        resid = resid.at[b.subject_ids].add(rb)
+    return W_out, resid
 
 
 def reconstruct_uk(

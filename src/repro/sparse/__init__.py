@@ -8,6 +8,7 @@ from repro.sparse.coo import (
 from repro.sparse.bucketing import (
     SCOO_DENSITY_THRESHOLD,
     BucketPlan,
+    fixed_plan,
     plan_buckets,
     route_formats,
 )
@@ -19,6 +20,7 @@ __all__ = [
     "random_irregular",
     "random_parafac2",
     "BucketPlan",
+    "fixed_plan",
     "plan_buckets",
     "route_formats",
     "SCOO_DENSITY_THRESHOLD",

@@ -32,7 +32,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["BucketPlan", "plan_buckets", "route_formats",
+__all__ = ["BucketPlan", "fixed_plan", "plan_buckets", "route_formats",
            "SCOO_DENSITY_THRESHOLD"]
 
 # Density below which the SCOO format wins over CC for a bucket: one SCOO
@@ -187,6 +187,36 @@ def plan_buckets(
         nnz_pads = [_round_up(int(nz[mem].max()), nnz_align) if mem.size else
                     nnz_align for mem in members]
     return BucketPlan(shapes=shapes, members=members, nnz_pads=nnz_pads)
+
+
+def fixed_plan(
+    n_subjects: int,
+    i_pad: int,
+    c_pad: int,
+    *,
+    nnz_pad: Optional[int] = None,
+) -> BucketPlan:
+    """A single-bucket plan with an EXPLICIT padded geometry.
+
+    The quantile planner above picks shapes from the data, so two batches
+    with different member geometry compile two different programs. The
+    streaming service (``launch/stream.py``) instead pins one
+    ``(I_pad, C_pad[, N_pad])`` rectangle chosen up front and pads every
+    request batch into it — each flush then re-dispatches the SAME compiled
+    update regardless of which subjects arrived. Members are simply
+    ``0..n_subjects-1``: the caller stages exactly the batch's subjects.
+
+    Raises ``ValueError`` downstream (in ``bucketize``) if a subject exceeds
+    the pinned nnz budget; row/col overflow must be checked by the caller
+    (the service grows its sticky geometry and recompiles).
+    """
+    if n_subjects < 1 or i_pad < 1 or c_pad < 1:
+        raise ValueError("fixed_plan needs n_subjects, i_pad, c_pad >= 1")
+    return BucketPlan(
+        shapes=[(int(i_pad), int(c_pad))],
+        members=[np.arange(n_subjects, dtype=np.int32)],
+        nnz_pads=None if nnz_pad is None else [int(nnz_pad)],
+    )
 
 
 def route_formats(

@@ -125,3 +125,85 @@ def test_sample_token_greedy_and_topk():
     seen = {int(sample_token(logits, jax.random.PRNGKey(s), temperature=50.0)[0, 0])
             for s in range(50)}
     assert len(seen) > 1
+
+
+# ---------------------------------------------------------------------------
+# stream driver (launch/stream.py) — ISSUE-6 serving CLI
+# ---------------------------------------------------------------------------
+
+def test_stream_driver_json_summary(tmp_path):
+    """--json writes the machine-readable latency/throughput/drift summary
+    (the blob CI's stream bench gate and dashboards consume)."""
+    import json
+    from repro.launch import stream as stream_mod
+
+    path = tmp_path / "stream.json"
+    out = stream_mod.main([
+        "--dataset", "synthetic", "--scale", "0.002", "--rank", "3",
+        "--warm-iters", "5", "--warm-frac", "0.6", "--touch-frac", "0.3",
+        "--batch-slots", "4", "--drift-threshold", "1e9",
+        "--smooth", "0.1", "--format", "auto", "--seed", "0",
+        "--json", str(path),
+    ])
+    blob = json.loads(path.read_text())
+    assert blob["appends"] == out["appends"] > 0
+    assert blob["batches"] >= 1
+    assert blob["new"] + blob["touched"] == blob["appends"]
+    for q in ("p50", "p99", "mean", "max"):
+        assert blob["latency_ms"][q] > 0
+    assert blob["latency_ms"]["p50"] <= blob["latency_ms"]["p99"]
+    assert blob["subjects_per_s"] > 0
+    assert 0.0 <= blob["drift"] and blob["refits"] == 0
+    assert np.isfinite(blob["stream_fit"]) and np.isfinite(blob["baseline_fit"])
+    assert blob["warm"]["fit"] == out["warm"]["fit"]
+    assert blob["smooth_lam"] == 0.1
+    assert blob["n_subjects"] > blob["warm"]["n_subjects"]  # stream grew K
+
+
+def test_stream_driver_replays_appends_file(tmp_path):
+    """--appends FILE.jsonl replays external payloads; the summary counts
+    exactly the replayed requests and a checkpoint lands in --ckpt-dir."""
+    import json
+    from repro.launch import stream as stream_mod
+    from repro import checkpoint as ckpt
+
+    appends = tmp_path / "appends.jsonl"
+    payloads = [
+        {"rows": [0, 1, 2], "cols": [0, 3, 5], "vals": [1.0, 2.0, 3.0],
+         "n_rows": 4},
+        {"rows": [0, 0, 1], "cols": [1, 2, 4], "vals": [0.5, 0.25, 4.0]},
+    ]
+    appends.write_text("\n".join(json.dumps(p) for p in payloads) + "\n")
+    ckpt_dir = tmp_path / "ckpt"
+    out = stream_mod.main([
+        "--dataset", "synthetic", "--scale", "0.002", "--rank", "3",
+        "--warm-iters", "4", "--drift-threshold", "1e9",
+        "--appends", str(appends), "--ckpt-dir", str(ckpt_dir),
+    ])
+    assert out["appends"] == 2 and out["new"] == 2 and out["touched"] == 0
+    assert ckpt.latest_step(str(ckpt_dir)) == 2
+
+
+def test_stream_driver_fails_fast_on_malformed_payloads(tmp_path):
+    """Malformed append payloads abort with ValueError BEFORE any dispatch:
+    bad JSON, missing keys, and out-of-range columns all name the problem."""
+    from repro.launch import stream as stream_mod
+
+    base = ["--dataset", "synthetic", "--scale", "0.002", "--rank", "3",
+            "--warm-iters", "3", "--drift-threshold", "1e9"]
+
+    bad_json = tmp_path / "bad.jsonl"
+    bad_json.write_text('{"rows": [0], "cols": [0]\n')
+    with pytest.raises(ValueError, match="not valid JSON"):
+        stream_mod.main(base + ["--appends", str(bad_json)])
+
+    missing = tmp_path / "missing.jsonl"
+    missing.write_text('{"rows": [0], "cols": [0]}\n')
+    with pytest.raises(ValueError, match="missing required key"):
+        stream_mod.main(base + ["--appends", str(missing)])
+
+    out_of_range = tmp_path / "oob.jsonl"
+    out_of_range.write_text(
+        '{"rows": [0], "cols": [10000000], "vals": [1.0]}\n')
+    with pytest.raises(ValueError, match="column ids"):
+        stream_mod.main(base + ["--appends", str(out_of_range)])

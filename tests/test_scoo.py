@@ -350,3 +350,90 @@ def test_pallas_block_skip_explicit_zero_values():
                               interpret=True)
         np.testing.assert_allclose(np.asarray(out_p), np.asarray(ref_p),
                                    rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis when available, seeded replay otherwise)
+# ---------------------------------------------------------------------------
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
+from repro.sparse import SCOO_DENSITY_THRESHOLD, fixed_plan  # noqa: E402
+
+
+def _random_geometry(seed):
+    """A random ragged dataset spanning dense-ish and ultra-sparse subjects
+    so the auto-router sees both sides of the threshold."""
+    rng = np.random.default_rng(seed)
+    n_cols = int(rng.integers(8, 60))
+    subs = []
+    for _ in range(int(rng.integers(3, 12))):
+        n_rows = int(rng.integers(1, 40))
+        cap = n_rows * n_cols
+        nnz = int(rng.integers(1, min(cap, 200) + 1))
+        subs.append(_subject(rng, n_rows, n_cols, nnz))
+    return IrregularCOO(subjects=subs, n_cols=n_cols)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_route_formats_respects_density_threshold_property(seed):
+    """For ANY geometry, the auto-router's per-bucket decision is exactly
+    the 0.25 density rule (density measured over the padded CC cells)."""
+    data = _random_geometry(seed)
+    plan = plan_buckets(data.row_counts(), data.col_counts(),
+                        nnz_counts=data.nnz_counts(),
+                        max_buckets=int(np.random.default_rng(seed).integers(1, 5)),
+                        row_align=4, col_align=4)
+    dens = plan.bucket_densities(data.nnz_counts())
+    fmts = route_formats(plan, data.nnz_counts(), format="auto")
+    assert len(fmts) == plan.n_buckets
+    for d, f in zip(dens, fmts):
+        assert f == ("scoo" if d < SCOO_DENSITY_THRESHOLD else "cc")
+    # forcing a format always overrides the density rule
+    assert route_formats(plan, data.nnz_counts(), format="cc") == \
+        ["cc"] * plan.n_buckets
+    assert route_formats(plan, data.nnz_counts(), format="scoo") == \
+        ["scoo"] * plan.n_buckets
+
+
+def _device_nnz_and_sum(b):
+    vals = np.asarray(b.vals, dtype=np.float64)
+    return int(np.count_nonzero(vals)), float(vals.sum())
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_mixed_bucketize_roundtrips_nnz_property(seed):
+    """bucketize(format="auto") over ANY geometry materializes every
+    nonzero exactly once across its mixed CC/SCOO buckets — no drops, no
+    duplicates (value sums match in both formats' staging paths)."""
+    data = _random_geometry(seed)
+    bt = bucketize(data, max_buckets=3, row_align=4, col_align=4,
+                   format="auto", dtype=jnp.float64)
+    assert bt.n_subjects == data.n_subjects
+    got_nnz = 0
+    got_sum = 0.0
+    for b in bt.buckets:
+        n, s = _device_nnz_and_sum(b)
+        got_nnz += n
+        got_sum += s
+    want_sum = float(sum(s.vals.sum() for s in data.subjects))
+    assert got_nnz == data.nnz
+    np.testing.assert_allclose(got_sum, want_sum, rtol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fixed_plan_roundtrips_nnz_property(seed):
+    """The streaming service's pinned-geometry bucketize (fixed_plan) is
+    also drop-free for any batch that fits the rectangle, in both formats."""
+    data = _random_geometry(seed)
+    i_pad = max(s.n_rows for s in data.subjects)
+    c_pad = max(s.nonzero_cols().size for s in data.subjects)
+    n_pad = max(s.nnz for s in data.subjects)
+    for fmt in ("cc", "scoo"):
+        plan = fixed_plan(data.n_subjects, i_pad, c_pad,
+                          nnz_pad=n_pad if fmt == "scoo" else None)
+        bt = bucketize(data, plan=plan, formats=[fmt], dtype=jnp.float64)
+        got = sum(_device_nnz_and_sum(b)[0] for b in bt.buckets)
+        assert got == data.nnz
