@@ -111,8 +111,14 @@ def compare_namespace(name: str, base: dict, cur: dict, threshold: float,
         if bad:
             regressions.append(f"{name}/{path}: baseline={bval:.4g} "
                                f"current={cval:.4g} ({verdict})")
-    for path in sorted(set(cur_leaves) - set(base_leaves)):
-        rows.append((f"{name}/{path}", "new case (no baseline)", ""))
+    # leaves only in current (a grown grid, or an axis rename that moved a
+    # row to a new path): never gated — one line, not a wall of rows, so a
+    # rename that orphans the whole namespace stays readable
+    new = sorted(set(cur_leaves) - set(base_leaves))
+    if new:
+        rows.append((f"{name}: {len(new)} new leaf(s), ungated",
+                     ", ".join(p.split("/")[0] for p in new[:4])
+                     + ("..." if len(new) > 4 else ""), ""))
     return regressions, rows
 
 
@@ -145,8 +151,11 @@ def main(argv=None) -> int:
 
     all_regressions = []
     for name, cur in currents.items():
-        if name not in baseline:
-            print(f"[compare] namespace {name!r} not in baseline — skipped")
+        if not isinstance(baseline.get(name), dict):
+            # absent OR a non-dict stub: a brand-new namespace (e.g. a fresh
+            # benchmark axis) has nothing to gate against — skip, don't crash
+            print(f"[compare] namespace {name!r} not in baseline — "
+                  f"new namespace, ungated")
             continue
         regs, rows = compare_namespace(name, baseline[name], cur,
                                        args.threshold, tuple(args.skip))

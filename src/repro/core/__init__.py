@@ -1,8 +1,17 @@
 """Paper core: PARAFAC2 + SPARTan MTTKRP on bucketed compressed-column data."""
 from repro.core.irregular import (
     Bucket, Bucketed, BlockBucket, SparseBucket, bucketize, bucket_format,
-    to_block_bucket, FORMATS, LANE)
+    cc_bucket_like, to_block_bucket, FORMATS, LANE)
 from repro.core.backend import MttkrpBackend, get_backend
+from repro.core.compress import (
+    CompressedBucket,
+    CompressedData,
+    Preprocess,
+    available as available_preprocess,
+    parse_preprocess_spec,
+    preprocess_summary,
+    register_preprocess,
+)
 from repro.core.constraints import (
     Constraint,
     available as available_constraints,
@@ -24,6 +33,14 @@ from repro.core.engine import (
     ENGINES, fit_device, make_als_chunk, make_als_while, make_subject_update)
 
 __all__ = [
+    "CompressedBucket",
+    "CompressedData",
+    "Preprocess",
+    "available_preprocess",
+    "parse_preprocess_spec",
+    "preprocess_summary",
+    "register_preprocess",
+    "cc_bucket_like",
     "Constraint",
     "available_constraints",
     "constraints_for",

@@ -111,6 +111,16 @@ class MttkrpBackend(abc.ABC):
         """X_k V [Kb, I_pad, R] — the Procrustes-step input."""
         return self.shard_subjects(b.xk_times_v(V, Vg))
 
+    def sketch_bucket(self, b, Omega: jax.Array,
+                      Og: Optional[jax.Array] = None) -> jax.Array:
+        """Y_k = X_k Ω [Kb, I_pad, S] — the randomized range-finder sketch
+        (:mod:`repro.core.compress`). Same contraction as ``xkv_bucket`` with
+        a wider right factor: tall-skinny MXU matmuls on CC buckets, O(nnz*S)
+        segment-sums on SCOO buckets (the sketch never densifies them)."""
+        from repro.kernels import sketch as _sketch
+
+        return self.shard_subjects(_sketch.sketch_bucket(b, Omega, Og))
+
     def project_bucket(self, b, Q: jax.Array):
         """Per-bucket projected representation consumed by the *_bucket
         stages below: the compact Yc [Kb, R, C] on the dense route."""

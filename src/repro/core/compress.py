@@ -1,0 +1,423 @@
+"""Preprocessing stage registry + the DPar2-style rsvd compression pass.
+
+SPARTan made the per-iteration cost O(nnz); this module decouples iteration
+count from data size the way DPar2 (PAPERS.md) does for irregular PARAFAC2:
+*compress first*. Per bucket, a randomized QB decomposition collapses every
+slice X_k [I_pad, J] to a small core G_k = P_k^T X_k [S, C_pad] behind an
+orthonormal basis P_k [I_pad, S] (S = r + p sketch columns). The unchanged
+ALS engines and the whole constraint layer then iterate on the cores — every
+sweep costs O(S * C_pad * R) instead of O(I_pad * C_pad * R) — and the
+fitted core factors expand *exactly* back to full space at the end:
+
+  * **compression is format-aware, never densifying**: the sketch
+    Y_k = X_k Ω and the power iterations route through the same bucket-level
+    stages as ALS (:mod:`repro.kernels.sketch`) — dense tall-skinny matmuls
+    on CC buckets, O(nnz) segment-sums on SCOO buckets;
+  * **the cores ARE a dataset**: G_k shares X_k's kept-column metadata, so
+    the core bucket is an ordinary CC :class:`~repro.core.irregular.Bucket`
+    and the core :class:`~repro.core.irregular.Bucketed` flows through
+    ``als_step``, every engine (host/scan/while/mesh) and every constraint
+    without a single branch;
+  * **the reported fit is the TRUE full-space fit**: for orthonormal P_k,
+    ``||X_k - P_k M||^2 = ||G_k - M||^2 + (||X_k||^2 - ||G_k||^2)``, so the
+    core dataset carries the ORIGINAL ``norm_sq`` and the engines' fit
+    formula (norm_sq - 2*cross + model) evaluates the full-space residual of
+    the expanded model at every iteration — no engine changes;
+  * **expansion is a retraction, not an approximation**: polar(P B) =
+    P polar(B) for orthonormal-column P, so the full-space Procrustes factor
+    is Q_k = P_k Q̃_k with Q̃_k the core-space factor; H, V, W live in
+    full space throughout. A final residual-correction pass
+    (:func:`residual_correct`) re-evaluates the fit on the *original* data
+    at the expanded Q_k (fresh, not one-step-stale) and replaces
+    ``state.fit``.
+
+The API mirrors the constraint layer (:mod:`repro.core.constraints`): a
+**registry** of named preprocessors (:func:`register_preprocess` /
+:func:`available`) and the same ``name[:param][+...]`` spec grammar parsed
+fail-fast by :func:`parse_preprocess_spec` — unknown names raise
+``ValueError`` listing the registered preprocessors. Built-ins:
+
+  * ``none`` — identity (the default);
+  * ``rsvd[:r[:p[:q]]]`` — randomized QB with target core rank ``r``
+    (default ``2 * rank``), oversampling ``p`` (default 8) and ``q`` power
+    iterations (default 1). Buckets whose padded row space is already
+    <= r + p pass through uncompressed (mixed core datasets are fine — the
+    auto backend routes per bucket).
+
+``Parafac2Options(compress=...)`` threads a spec through :func:`fit`;
+``--compress`` is the driver/benchmark twin. See docs/ARCHITECTURE.md
+stage 10.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.irregular import Bucketed, bucket_format, cc_bucket_like
+from repro.core.backend import get_backend
+from repro.core.procrustes import polar_gram_eigh
+from repro.dist.sharding import psum_subjects
+from repro.kernels import sketch as _sketch
+from repro.sparse.bucketing import route_compress
+
+__all__ = [
+    "CompressedBucket",
+    "CompressedData",
+    "Preprocess",
+    "PreprocessDef",
+    "available",
+    "compress",
+    "exact_fit",
+    "expand_q",
+    "fit_compressed",
+    "parse_preprocess_spec",
+    "preprocess_summary",
+    "register_preprocess",
+    "residual_correct",
+]
+
+
+# ---------------------------------------------------------------------------
+# registry of named preprocessors (same shape as constraints._REGISTRY)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PreprocessDef:
+    """One registered preprocessing stage.
+
+    param_names: ordered int parameters the spec may carry (``name:a:b:c``)
+    defaults:    per-parameter default; 0 means "resolve at apply time"
+    apply:       ``apply(pp, data, opts, seed) -> CompressedData``; None
+                 marks the identity stage (fit() skips the whole pass)
+    """
+
+    param_names: Tuple[str, ...] = ()
+    defaults: Tuple[int, ...] = ()
+    apply: Optional[Callable] = None
+
+
+_REGISTRY: Dict[str, PreprocessDef] = {}
+
+
+def register_preprocess(name: str, d: PreprocessDef) -> None:
+    """Register (or override) a named preprocessing stage."""
+    if len(d.param_names) != len(d.defaults):
+        raise ValueError(f"preprocess {name!r}: param_names/defaults mismatch")
+    _REGISTRY[name] = d
+    if "parse_preprocess_spec" in globals():   # built-ins register before it
+        parse_preprocess_spec.cache_clear()    # overrides must reach parses
+
+
+def available() -> Tuple[str, ...]:
+    """Registered preprocessor names (sorted) — error messages and --help."""
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# spec parsing -> Preprocess
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Preprocess:
+    """A parsed preprocessing spec: canonical string + resolved int params."""
+
+    spec: str
+    name: str
+    params: Tuple[int, ...]
+
+    @property
+    def identity(self) -> bool:
+        return _REGISTRY[self.name].apply is None
+
+    def param(self, pname: str) -> int:
+        d = _REGISTRY[self.name]
+        return self.params[d.param_names.index(pname)]
+
+    def sketch_dim(self, rank: int) -> int:
+        """Basis width S = r + p; a bare ``rsvd`` resolves r to 2 * rank."""
+        r = self.param("r") or 2 * rank
+        if r < rank:
+            raise ValueError(
+                f"compress spec {self.spec!r}: core rank r={r} is below the "
+                f"model rank {rank} — the cores cannot carry a rank-{rank} "
+                f"model")
+        return r + self.param("p")
+
+    def apply(self, data: Bucketed, opts, *, seed: int = 0) -> "CompressedData":
+        fn = _REGISTRY[self.name].apply
+        if fn is None:
+            raise ValueError(f"preprocess {self.spec!r} is the identity — "
+                             f"nothing to apply")
+        return fn(self, data, opts, seed)
+
+
+@functools.lru_cache(maxsize=None)
+def parse_preprocess_spec(spec: str) -> Preprocess:
+    """Parse ``"name[:param][+...]"`` into a :class:`Preprocess`.
+
+    The grammar is the constraint layer's: ``+``-composition is accepted
+    syntactically (``none`` terms are dropped), but no two non-identity
+    stages currently compose. Unknown names raise ``ValueError`` listing the
+    registered preprocessors; non-integer or negative parameters fail fast.
+    """
+    raw = [p.strip() for p in str(spec).split("+") if p.strip()]
+    if not raw:
+        raw = ["none"]
+    parts = []
+    for part in raw:
+        name, _, rest = part.partition(":")
+        name = name.strip()
+        if name not in _REGISTRY:
+            raise ValueError(
+                f"unknown preprocess {name!r} in spec {spec!r}; "
+                f"registered preprocessors: {', '.join(available())}")
+        d = _REGISTRY[name]
+        given = [s.strip() for s in rest.split(":")] if rest else []
+        if len(given) > len(d.param_names):
+            raise ValueError(
+                f"preprocess {name!r} takes at most {len(d.param_names)} "
+                f"parameters ({':'.join(d.param_names)}); {part!r} has "
+                f"{len(given)}")
+        params = list(d.defaults)
+        for i, tok in enumerate(given):
+            try:
+                params[i] = int(tok)
+            except ValueError:
+                raise ValueError(
+                    f"bad {d.param_names[i]}={tok!r} in preprocess {part!r} "
+                    f"(integer expected)")
+            if params[i] < 0:
+                raise ValueError(f"negative {d.param_names[i]} in "
+                                 f"preprocess {part!r}")
+        parts.append((name, tuple(params), len(given)))
+    # drop redundant identity terms when composed with anything else
+    if len(parts) > 1:
+        parts = [t for t in parts if _REGISTRY[t[0]].apply is not None] \
+            or parts[:1]
+    if len(parts) > 1:
+        raise ValueError(
+            f"preprocessing stages do not compose: {spec!r} (pick one of "
+            f"{', '.join(available())})")
+    name, params, n_given = parts[0]
+    canon = name + "".join(f":{v}" for v in params[:n_given])
+    return Preprocess(spec=canon, name=name, params=params)
+
+
+def preprocess_summary(spec: str, rank: Optional[int] = None) -> Dict[str, Any]:
+    """Canonicalized compress block for the --json summaries."""
+    pp = parse_preprocess_spec(spec)
+    out: Dict[str, Any] = {"spec": pp.spec}
+    if not pp.identity and rank is not None:
+        out["sketch_dim"] = pp.sketch_dim(rank)
+        out["power_iters"] = pp.param("q")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the compressed representation
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CompressedBucket:
+    """One bucket after the QB pass: orthonormal bases + the core bucket.
+
+    basis: f[Kb, I_pad, S] per-subject orthonormal P_k (zero columns for
+           rank-deficient directions and padding subjects), or None for a
+           pass-through bucket (i_pad <= S already)
+    core:  the small-core CC Bucket (vals = G_k = P_k^T X_k, [Kb, S, C_pad],
+           sharing the original kept-column metadata) — or the ORIGINAL
+           bucket, unchanged, when basis is None
+    """
+
+    basis: Optional[jax.Array]
+    core: Any
+
+    def tree_flatten(self):
+        return (self.basis, self.core), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def compressed(self) -> bool:
+        return self.basis is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedData:
+    """The full compressed dataset handed between compress -> fit -> expand.
+
+    ``data`` is the core :class:`Bucketed` the engines iterate on. Its
+    ``norm_sq`` is the ORIGINAL ``||X||_F^2`` — that constant offset is
+    exactly what makes the engines' core-space residual the true full-space
+    residual (see the module docstring identity). ``core_norm_sq`` keeps the
+    cores' own energy ``sum_k ||G_k||^2`` for diagnostics (the captured-
+    energy fraction is ``core_norm_sq / norm_sq``).
+    """
+
+    spec: str
+    data: Bucketed
+    buckets: List[CompressedBucket]
+    sketch_dim: int
+    core_norm_sq: float
+    stats: List[dict]
+
+
+# ---------------------------------------------------------------------------
+# the rsvd pass
+# ---------------------------------------------------------------------------
+
+def compress(data: Bucketed, opts, pp: Preprocess, *,
+             seed: int = 0) -> CompressedData:
+    """Per-bucket randomized QB: X_k -> (P_k, G_k); cores become a Bucketed.
+
+    One shared Gaussian Ω [J, S] sketches every bucket (so CC and SCOO
+    layouts of the same data agree to numerical precision), the sketch and
+    power iterations run through the bucket-level backend stages (SCOO
+    buckets never densify), and ``polar_gram_eigh`` orthonormalizes — slices
+    with fewer than S independent rows get exactly-zero basis columns, the
+    correct degenerate limit. Buckets with ``i_pad <= S`` pass through
+    uncompressed (compression would only add FLOPs).
+    """
+    S = pp.sketch_dim(opts.rank)
+    q = pp.param("q")
+    be = get_backend(opts.backend)
+    # decorrelate the sketch from init_state's factor init at the same seed
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), 0x5EED)
+    Omega = _sketch.gaussian_sketch(key, data.n_cols, S, opts.dtype)
+    route = route_compress([(b.i_pad, b.c_pad) for b in data.buckets], S)
+    cbuckets: List[CompressedBucket] = []
+    stats: List[dict] = []
+    core_sq = 0.0
+    for b, do_compress in zip(data.buckets, route):
+        b_sq = float(jnp.sum(b.sq_norms()))
+        rec = {"format": bucket_format(b), "i_pad": b.i_pad,
+               "compressed": bool(do_compress)}
+        if not do_compress:
+            cbuckets.append(CompressedBucket(basis=None, core=b))
+            core_sq += b_sq
+            rec.update(core_rows=b.i_pad, energy=1.0)
+        else:
+            Y = be.sketch_bucket(b, Omega)                  # [Kb, I_pad, S]
+            Y = _sketch.power_iterate(b, Y, q)
+            P = polar_gram_eigh(Y) * b.subject_mask[:, None, None]
+            G = b.project(P)                                # [Kb, S, C_pad]
+            core = cc_bucket_like(b, G.astype(opts.dtype),
+                                  row_counts=jnp.minimum(b.row_counts, S))
+            cbuckets.append(CompressedBucket(basis=P, core=core))
+            g_sq = float(jnp.sum(core.sq_norms()))
+            core_sq += g_sq
+            rec.update(core_rows=S, energy=g_sq / max(b_sq, 1e-30))
+        stats.append(rec)
+    core_data = Bucketed(
+        buckets=[cb.core for cb in cbuckets],
+        n_subjects=data.n_subjects,
+        n_cols=data.n_cols,
+        norm_sq=data.norm_sq,     # ORIGINAL norm: engine fit is full-space
+    )
+    return CompressedData(spec=pp.spec, data=core_data, buckets=cbuckets,
+                          sketch_dim=S, core_norm_sq=core_sq, stats=stats)
+
+
+register_preprocess("none", PreprocessDef())
+register_preprocess("rsvd", PreprocessDef(
+    param_names=("r", "p", "q"), defaults=(0, 8, 1),
+    apply=lambda pp, data, opts, seed: compress(data, opts, pp, seed=seed)))
+
+
+# ---------------------------------------------------------------------------
+# expansion + the residual-correction pass
+# ---------------------------------------------------------------------------
+
+def expand_q(comp: CompressedData, state, opts) -> List[jax.Array]:
+    """Full-space Procrustes factors per bucket: Q_k = P_k Q̃_k.
+
+    Q̃_k is the core-space factor at the fitted state (recomputed through
+    the ordinary Procrustes stage on the core bucket — the engines never
+    store Q). For orthonormal-column P the product IS the polar factor of
+    the full-space target, so this is a retraction, not an approximation.
+    """
+    from repro.core import parafac2 as p2
+
+    be = get_backend(opts.backend)
+    out: List[jax.Array] = []
+    for i, cb in enumerate(comp.buckets):
+        _, _, Qc = p2._procrustes_project(
+            cb.core, state.H, state.V, state.W, opts, i, be)
+        if cb.basis is None:
+            out.append(Qc)
+        else:
+            out.append(jnp.einsum("kis,ksr->kir", cb.basis, Qc))
+    return out
+
+
+def exact_fit(data: Bucketed, state, opts, Qs: List[jax.Array]) -> jax.Array:
+    """Full-space model fit on the ORIGINAL data at explicit Q_k factors.
+
+    Same R x R algebra as the ``als_step`` fit stage, but with fresh (not
+    one-step-stale) Q and the original buckets — this is the residual-
+    correction pass that certifies the expanded factors.
+    """
+    from repro.core import parafac2 as p2
+
+    be = get_backend(opts.backend)
+    H, V, W = state.H, state.V, state.W
+    VtV = V.T @ V
+    Phi = H.T @ H
+    delta = jnp.zeros((), opts.dtype)
+    for i, (b, Q) in enumerate(zip(data.buckets, Qs)):
+        proj = be.project_bucket(b, Q)
+        G = be.ykv_bucket(b, proj, V)                       # [Kb, R, R]
+        Wb = p2._w_rows(W, b, i)
+        cross = jnp.einsum("rl,krl,kl,k->", H, G, Wb, b.subject_mask)
+        model = jnp.einsum("rl,rl,kr,kl,k->", Phi, VtV, Wb, Wb,
+                           b.subject_mask)
+        delta = delta - 2.0 * cross + model
+    norm_sq = jnp.asarray(data.norm_sq, opts.dtype)
+    resid = norm_sq + psum_subjects(delta)
+    return 1.0 - jnp.sqrt(jnp.maximum(resid, 0.0)) / jnp.sqrt(norm_sq)
+
+
+def residual_correct(data: Bucketed, comp: CompressedData, state, opts):
+    """Replace ``state.fit`` with the exact full-space fit at the expanded
+    factors (H, V, W are full-space already; only Q needs expansion)."""
+    Qs = expand_q(comp, state, opts)
+    return state._replace(fit=exact_fit(data, state, opts, Qs))
+
+
+def fit_compressed(data: Bucketed, opts, *, max_iters: int = 100,
+                   tol: float = 1e-6, seed: int = 0, verbose: bool = False,
+                   state=None):
+    """compress -> core ALS (unchanged engines) -> expand + correct.
+
+    The entry point ``repro.core.parafac2.fit`` routes here whenever
+    ``opts.compress`` names a non-identity stage. Returns the usual
+    ``(state, history)`` with full-space factors; the last history entry is
+    replaced by the residual-corrected exact fit.
+    """
+    from repro.core import parafac2 as p2
+
+    pp = parse_preprocess_spec(opts.compress)
+    core_opts = dataclasses.replace(opts, compress="none")
+    if pp.identity:
+        return p2.fit(data, core_opts, max_iters=max_iters, tol=tol,
+                      seed=seed, verbose=verbose, state=state)
+    comp = pp.apply(data, core_opts, seed=seed)
+    if verbose:
+        frac = comp.core_norm_sq / max(comp.data.norm_sq, 1e-30)
+        print(f"[compress] {pp.spec}: sketch_dim={comp.sketch_dim}, "
+              f"{sum(s['compressed'] for s in comp.stats)}/"
+              f"{len(comp.stats)} buckets compressed, "
+              f"captured energy {frac:.4f}")
+    state, history = p2.fit(comp.data, core_opts, max_iters=max_iters,
+                            tol=tol, seed=seed, verbose=verbose, state=state)
+    state = residual_correct(data, comp, state, core_opts)
+    if history:
+        history[-1] = float(state.fit)
+    return state, history

@@ -307,6 +307,13 @@ def fit_device(
     if opts.engine == "host":
         raise ValueError("fit_device handles the device engines; "
                          "engine='host' is parafac2.fit's own loop")
+    if opts.compress not in ("", "none"):
+        # direct callers: the compression pass is host-side preprocessing
+        # and lives ABOVE the engines — parafac2.fit compresses, then calls
+        # back here with compress="none" on the core dataset.
+        raise ValueError(
+            f"fit_device runs the core ALS only (compress={opts.compress!r}); "
+            f"route compressed fits through repro.core.parafac2.fit")
     if state is None:
         state = p2.init_state(data, opts, seed)
 

@@ -49,7 +49,7 @@ from repro.sparse.bucketing import BucketPlan, plan_buckets, route_formats
 from repro.sparse.bucketing import SCOO_DENSITY_THRESHOLD
 
 __all__ = ["Bucket", "SparseBucket", "Bucketed", "bucketize", "bucket_format",
-           "FORMATS", "LANE"]
+           "cc_bucket_like", "FORMATS", "LANE"]
 
 LANE = 128  # TPU lane width; BCC column-block quantum
 
@@ -295,6 +295,24 @@ def bucket_format(b) -> str:
     """Device-format tag of a bucket: "cc" | "scoo" (BCC buckets are a
     kernel-side conversion, never stored in a Bucketed)."""
     return getattr(b, "format", "cc")
+
+
+def cc_bucket_like(b, vals: jax.Array,
+                   row_counts: Optional[jax.Array] = None) -> Bucket:
+    """A CC :class:`Bucket` holding ``vals`` [Kb, I', C_pad] under ``b``'s
+    column/subject metadata (``b`` may be CC or SCOO — the metadata contract
+    is shared). The row space I' may differ from ``b.i_pad``: this is how the
+    compression stage (:mod:`repro.core.compress`) wraps the small cores
+    ``G_k = P_k^T X_k`` as an ordinary bucket the engines iterate on.
+    """
+    if vals.shape[0] != b.kb or vals.shape[2] != b.c_pad:
+        raise ValueError(
+            f"vals shape {vals.shape} does not match bucket metadata "
+            f"(Kb={b.kb}, C_pad={b.c_pad})")
+    return Bucket(
+        vals=vals, cols=b.cols, col_mask=b.col_mask,
+        subject_ids=b.subject_ids, subject_mask=b.subject_mask,
+        row_counts=b.row_counts if row_counts is None else row_counts)
 
 
 @jax.tree_util.register_pytree_node_class

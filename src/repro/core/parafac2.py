@@ -29,7 +29,6 @@ format="auto")`` dataset mixes CC and SCOO buckets. See docs/ARCHITECTURE.md
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Dict, List, Mapping, NamedTuple, Optional, Tuple, Union
 
 import jax
@@ -38,6 +37,7 @@ import numpy as np
 
 from repro.core.irregular import Bucket, Bucketed
 from repro.core.backend import MttkrpBackend, get_backend
+from repro.core import compress as _compress
 from repro.core import constraints as cst
 from repro.core.cp import normalize_columns
 from repro.core.procrustes import solve_q
@@ -66,9 +66,16 @@ class Parafac2Options:
     # repro.core.constraints for the spec grammar and registry). None selects
     # the legacy behaviour: nonneg on V and W as in the paper.
     constraints: Optional[Union[Mapping[str, str], Tuple]] = None
-    # DEPRECATED: the pre-constraint-layer boolean (nonneg on V, W). Use
-    # constraints={"v": "nonneg", "w": "nonneg"} / {"v": "none", "w": "none"}.
-    nonneg: Optional[bool] = None
+    # Preprocessing stage spec ("none" | "rsvd[:r[:p[:q]]]" | any registered
+    # preprocessor — see repro.core.compress). Non-identity stages make fit()
+    # compress the data first, run the UNCHANGED core ALS on the small cores,
+    # and expand + residual-correct at the end.
+    compress: str = "none"
+    # REMOVED (was deprecated in the constraint-layer PR): the
+    # pre-constraint-layer nonneg bool. Passing it raises TypeError with the
+    # migration hint below; the InitVar keeps the error message better than
+    # a bare "unexpected keyword argument".
+    nonneg: dataclasses.InitVar[Optional[bool]] = None
     procrustes: str = "gram_eigh"       # "svd" | "gram_eigh" | "newton_schulz"
     mode1_reuse: bool = True            # beyond-paper: reuse X_k V from step 1
     nnls_sweeps: int = 5
@@ -101,29 +108,27 @@ class Parafac2Options:
     # check evaluated on device (exact host stopping semantics).
     check_every: int = 10
 
-    def __post_init__(self):
+    def __post_init__(self, nonneg):
+        if nonneg is not None:
+            raise TypeError(
+                "Parafac2Options(nonneg=...) was removed (it shipped one "
+                "release as a DeprecationWarning shim); migrate to "
+                "constraints={'v': 'nonneg', 'w': 'nonneg'} for nonneg=True "
+                "or {'v': 'none', 'w': 'none'} for nonneg=False")
         if self.constraints is not None:
-            if self.nonneg is not None:
-                raise ValueError(
-                    "pass either constraints= or the deprecated nonneg= "
-                    "flag, not both")
             # normalize to a hashable, canonically ordered tuple of pairs
             object.__setattr__(
                 self, "constraints", tuple(sorted(dict(self.constraints).items())))
+        # fail fast on a bad preprocessing spec (ValueError listing the
+        # registered preprocessors), exactly like constraint specs do
+        _compress.parse_preprocess_spec(self.compress)
 
     def constraint_specs(self) -> Dict[str, str]:
-        """Resolved per-mode constraint specs (the deprecation shim lives
-        here: a legacy ``nonneg`` bool maps onto the equivalent specs)."""
+        """Resolved per-mode constraint specs (``constraints=None`` keeps the
+        paper's nonnegative V/W default)."""
         if self.constraints is not None:
             return dict(self.constraints)
-        if self.nonneg is not None:
-            warnings.warn(
-                "Parafac2Options(nonneg=...) is deprecated; use "
-                "constraints={'v': 'nonneg', 'w': 'nonneg'} (or 'none') "
-                "instead", DeprecationWarning, stacklevel=3)
-        nn = True if self.nonneg is None else self.nonneg
-        spec = "nonneg" if nn else "none"
-        return {"v": spec, "w": spec}
+        return {"v": "nonneg", "w": "nonneg"}
 
 
 def constraints_for(opts: Parafac2Options) -> Dict[str, cst.Constraint]:
@@ -343,10 +348,18 @@ def fit(
 ) -> Tuple[Parafac2State, List[float]]:
     """Full fitting loop with fit-change convergence.
 
-    ``opts.engine`` picks the execution engine: "host" is the reference loop
-    below (one jitted dispatch + one device sync per iteration); "scan" and
-    "mesh" run device-resident compiled chunks (see :mod:`repro.core.engine`).
+    ``opts.compress`` (a :mod:`repro.core.compress` spec) runs the whole loop
+    on randomized small cores: compress -> this same function with
+    ``compress="none"`` on the core dataset -> exact expand + residual
+    correction. ``opts.engine`` picks the execution engine: "host" is the
+    reference loop below (one jitted dispatch + one device sync per
+    iteration); "scan" and "mesh" run device-resident compiled chunks (see
+    :mod:`repro.core.engine`).
     """
+    if not _compress.parse_preprocess_spec(opts.compress).identity:
+        return _compress.fit_compressed(data, opts, max_iters=max_iters,
+                                        tol=tol, seed=seed, verbose=verbose,
+                                        state=state)
     if opts.engine != "host":
         from repro.core import engine as _engine
         return _engine.fit_device(data, opts, max_iters=max_iters, tol=tol,

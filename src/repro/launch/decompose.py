@@ -10,9 +10,13 @@ repro.core.irregular; "auto" routes each bucket CC-vs-SCOO by measured
 density, the O(nnz) sparse path for EHR-like sparsity); ``--constraint`` the
 per-mode factor constraints (COPA-style AO-ADMM layer — see
 repro.core.constraints; a bare spec such as ``--constraint nonneg_admm``
-applies to both V and W); ``--json`` writes the machine-readable run summary
-CI and the benchmarks consume, including the resolved constraint block and
-the per-bucket format/density decisions.
+applies to both V and W); ``--compress`` the preprocessing stage
+(repro.core.compress; ``rsvd[:r[:p[:q]]]`` runs the whole ALS on randomized
+small cores and expands exactly at the end — the DPar2-style decoupling of
+iteration count from data size); ``--json`` writes the machine-readable run
+summary CI and the benchmarks consume (the unified ``schema_version`` +
+``resolved_options`` layout of repro.launch.summary), including the resolved
+constraint/compress blocks and the per-bucket format/density decisions.
 """
 from __future__ import annotations
 
@@ -25,10 +29,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ENGINES, FORMATS, Parafac2Options, bucketize, fit
+from repro.core.compress import available as available_preprocess
 from repro.core.constraints import (
     available as available_constraints, constraint_summary, parse_constraint_arg)
 from repro.core.interpret import subject_top_phenotypes, top_phenotype_features
 from repro.data import choa_like, movielens_like
+from repro.launch.summary import resolved_options, run_summary
 from repro.sparse import plan_buckets, random_irregular, route_formats
 
 
@@ -50,15 +56,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--scale", type=float, default=0.002)
     ap.add_argument("--rank", type=int, default=5)
     ap.add_argument("--iters", type=int, default=20)
-    ap.add_argument("--nonneg", action=argparse.BooleanOptionalAction, default=True,
-                    help="DEPRECATED (use --constraint): nonnegativity on V/W "
-                         "(disable with --no-nonneg)")
     ap.add_argument("--constraint", default="", metavar="SPECS",
                     help="per-mode factor constraints, e.g. "
                          "'v=nonneg+l1:0.1,w=smooth:0.1' (modes h/v/w; a bare "
                          "spec applies to v and w; registered: "
                          f"{', '.join(available_constraints())} — see "
-                         "repro.core.constraints). Overrides --nonneg.")
+                         "repro.core.constraints). Default: the paper's "
+                         "nonneg V/W.")
+    ap.add_argument("--compress", default="none", metavar="SPEC",
+                    help="preprocessing stage (repro.core.compress): "
+                         f"registered: {', '.join(available_preprocess())}. "
+                         "'rsvd[:r[:p[:q]]]' compresses every tall bucket to "
+                         "randomized cores (rank r, default 2*rank; "
+                         "oversampling p; q power iterations), runs the core "
+                         "ALS, and expands exactly at the end")
     ap.add_argument("--backend", default="auto",
                     choices=["jnp", "pallas", "scoo", "auto"],
                     help="MTTKRP compute backend for the ALS hot loop "
@@ -86,8 +97,7 @@ def main(argv=None) -> dict:
         # raises ValueError listing the registered constraints on a bad spec
         specs = parse_constraint_arg(args.constraint)
     else:
-        nn = "nonneg" if args.nonneg else "none"
-        specs = {"v": nn, "w": nn}
+        specs = {"v": "nonneg", "w": "nonneg"}     # the paper's default
     print(f"[constraints] {constraint_summary(specs)}")
 
     t0 = time.perf_counter()
@@ -114,8 +124,10 @@ def main(argv=None) -> dict:
                       for r in bucket_stats)
           + f"; device bytes {device_bytes/2**20:.1f} MiB")
 
+    # raises ValueError listing the registered preprocessors on a bad spec
     opts = Parafac2Options(rank=args.rank, constraints=specs, backend=args.backend,
-                           engine=args.engine, check_every=args.check_every)
+                           engine=args.engine, check_every=args.check_every,
+                           compress=args.compress)
     t0 = time.perf_counter()
     state, hist = fit(bt, opts, max_iters=args.iters, tol=args.tol,
                       seed=args.seed, verbose=True)
@@ -128,25 +140,31 @@ def main(argv=None) -> dict:
         print(f"phenotype {r}: " + ", ".join(f"{n}({w:.2f})" for n, w in feats[:5]))
     print("subject 0 top phenotypes:", subject_top_phenotypes(np.asarray(state.W), 0))
     V_np = np.asarray(state.V)
-    summary = {
-        "dataset": args.dataset, "scale": args.scale, "rank": args.rank,
-        "engine": args.engine, "backend": args.backend, "tol": args.tol,
-        "check_every": args.check_every, "seed": args.seed,
+    summary = run_summary(
+        "decompose",
+        # the canonicalized option block every driver shares (includes the
+        # resolved constraint + compress specs)
+        resolved_options(opts, format=args.format, tol=args.tol,
+                         seed=args.seed),
+        dataset=args.dataset, scale=args.scale, rank=args.rank,
+        engine=args.engine, backend=args.backend, tol=args.tol,
+        check_every=args.check_every, seed=args.seed,
         # device-format decisions: requested format + the per-bucket routing
         # (chosen format, density, nnz, padded shape, device bytes)
-        "format": args.format,
-        "buckets": bucket_stats,
-        "device_bytes": device_bytes,
+        format=args.format,
+        buckets=bucket_stats,
+        device_bytes=device_bytes,
         # resolved (canonicalized) per-mode constraint specs + the V sparsity
         # they induced — the l1 knob's observable effect
-        "constraints": constraint_summary(specs),
-        "v_zero_fraction": float((V_np == 0.0).mean()),
-        "n_subjects": data.n_subjects, "n_cols": data.n_cols, "nnz": data.nnz,
-        "fit": float(hist[-1]), "fit_history": [float(f) for f in hist],
-        "iters": len(hist), "seconds_total": dt,
-        "seconds_per_iter": dt / max(len(hist), 1),
-        "platform": jax.default_backend(),
-    }
+        constraints=constraint_summary(specs),
+        compress=args.compress,
+        v_zero_fraction=float((V_np == 0.0).mean()),
+        n_subjects=data.n_subjects, n_cols=data.n_cols, nnz=data.nnz,
+        fit=float(hist[-1]), fit_history=[float(f) for f in hist],
+        iters=len(hist), seconds_total=dt,
+        seconds_per_iter=dt / max(len(hist), 1),
+        platform=jax.default_backend(),
+    )
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=1)

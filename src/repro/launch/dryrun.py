@@ -356,7 +356,7 @@ PARAFAC2_CELLS = {
 def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
                       backend: str = "jnp", engine: str = "host",
                       check_every: int = 8, constraint: str = "",
-                      format: str = "cc"):
+                      format: str = "cc", compress: str = "none"):
     """Lower + compile one PARAFAC2 cell. ``engine`` selects what one
     dispatch is: a single als_step ("host" — today's per-iteration loop), a
     check_every-iteration lax.scan chunk under GSPMD ("scan"), or the same
@@ -366,17 +366,30 @@ def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
     sparse path's production program shape + roofline). ``constraint`` is
     the driver spec syntax ("v=nonneg_admm,w=nonneg_admm"); ADMM specs put
     the carried dual pytree into the lowered state so the production program
-    shape includes the AO-ADMM solver state."""
+    shape includes the AO-ADMM solver state. ``compress`` is a
+    repro.core.compress spec ("rsvd[:r[:p[:q]]]"): the cell then lowers the
+    CORE geometry the compressed ALS iterates over — every bucket's row pad
+    clamped to the sketch dimension S = r + p, always CC (cores are dense) —
+    i.e. the program shape whose per-iteration roofline the DPar2-style
+    stage buys."""
     from repro.core import engine as als_engine
+    from repro.core.compress import parse_preprocess_spec
     from repro.core.constraints import parse_constraint_arg
 
     K, J, R, geom = PARAFAC2_CELLS[name]
+    pp = parse_preprocess_spec(compress)
+    if not pp.identity:
+        S = pp.sketch_dim(R)
+        # core ALS geometry: [Kb, min(I_pad, S), C_pad]; cores are dense CC
+        geom = [(kb, min(ip, S), cp, npad) for kb, ip, cp, npad in geom]
+        format = "cc"
     n_chips = int(np.prod(mesh.devices.shape))
-    rec = {"arch": name + ("+scoo" if format == "scoo" else ""),
+    rec = {"arch": name + ("+scoo" if format == "scoo" else "")
+           + ("+rsvd" if not pp.identity else ""),
            "shape": "als_step", "mesh": mesh_name,
            "kind": "parafac2", "n_chips": n_chips, "params": 0,
            "active_params": 0, "backend": backend, "engine": engine,
-           "format": format}
+           "format": format, "compress": pp.spec}
     specs = (parse_constraint_arg(constraint) if constraint
              else {"v": "nonneg", "w": "nonneg"})
     rec["constraints"] = {m: s for m, s in specs.items()}
@@ -479,6 +492,12 @@ def main(argv=None):
                          "one lowered dispatch is (see repro.core.engine)")
     ap.add_argument("--check-every", type=int, default=8,
                     help="scan-chunk length for --engine scan/mesh")
+    ap.add_argument("--compress", default="none",
+                    help="preprocessing spec for the PARAFAC2 cells "
+                         "(repro.core.compress, e.g. 'rsvd:80:8:1'): lowers "
+                         "the compressed CORE geometry (row pads clamped to "
+                         "the sketch dim, CC format) instead of the full "
+                         "data — the program shape the core ALS iterates on")
     ap.add_argument("--constraint", default="",
                     help="constraint spec for the PARAFAC2 cells "
                          "(driver syntax, e.g. 'v=nonneg_admm,w=nonneg_admm'); "
@@ -499,8 +518,12 @@ def main(argv=None):
         meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
 
     results = load_results(args.out)
-    results.setdefault("_meta", {})["flops_convention"] = (
-        calibrate_flops_convention(meshes[0][1]))
+    from repro.launch.summary import run_summary
+    meta = results.setdefault("_meta", {})
+    meta["flops_convention"] = calibrate_flops_convention(meshes[0][1])
+    # the unified driver schema block (repro.launch.summary); cells carry
+    # their own resolved knobs, so the options block here stays empty
+    meta.update(run_summary("dryrun", None))
 
     failures = []
     for mesh_name, mesh in meshes:
@@ -548,6 +571,8 @@ def main(argv=None):
                        + (f"+{args.backend}" if args.backend != "jnp" else "")
                        + (f"+{args.engine}" if args.engine != "host" else "")
                        + (f"+[{cons}]" if cons else "")
+                       + (f"+[{args.compress}]" if args.compress != "none"
+                          else "")
                        + tag)
                 if key in results and not args.force:
                     continue
@@ -558,7 +583,8 @@ def main(argv=None):
                                             engine=args.engine,
                                             check_every=args.check_every,
                                             constraint=cons,
-                                            format=args.format)
+                                            format=args.format,
+                                            compress=args.compress)
                     results[key] = rec
                     save_results(args.out, results)
                     print(f"[dryrun] {key}: OK bottleneck={rec['bottleneck']} "

@@ -65,6 +65,7 @@ from repro.core.constraints import (
     available as available_constraints, constraint_summary,
     parse_constraint_arg)
 from repro.core.irregular import Bucketed
+from repro.launch.summary import resolved_options, run_summary
 from repro.sparse import (
     IrregularCOO, SubjectCOO, fixed_plan, plan_buckets, route_formats)
 from repro.sparse.bucketing import SCOO_DENSITY_THRESHOLD
@@ -716,15 +717,22 @@ def main(argv=None) -> dict:
         path = svc.save(args.ckpt_dir)
         print(f"[ckpt] saved service state to {path}")
 
-    summary = {
-        "dataset": args.dataset, "scale": args.scale, "rank": args.rank,
-        "engine": args.engine, "backend": args.backend,
-        "constraints": constraint_summary(specs),
-        "warm": warm_info,
-        "stream_seconds": stream_s,
-        "platform": jax.default_backend(),
+    summary = run_summary(
+        "stream",
+        # the canonicalized option block every driver shares
+        resolved_options(opts, format=args.format, tol=args.tol,
+                         seed=args.seed, warm_frac=args.warm_frac,
+                         batch_slots=args.batch_slots,
+                         drift_threshold=args.drift_threshold,
+                         refit=args.refit, smooth_lam=args.smooth),
+        dataset=args.dataset, scale=args.scale, rank=args.rank,
+        engine=args.engine, backend=args.backend,
+        constraints=constraint_summary(specs),
+        warm=warm_info,
+        stream_seconds=stream_s,
+        platform=jax.default_backend(),
         **st,
-    }
+    )
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=1)

@@ -240,3 +240,19 @@ def route_formats(
             f"unknown format {format!r}; choose from 'cc', 'scoo', 'auto'")
     return ["scoo" if d < density_threshold else "cc"
             for d in plan.bucket_densities(nnz_counts)]
+
+
+def route_compress(shapes, sketch_dim: int) -> List[bool]:
+    """Per-bucket pass-through decision for the rsvd preprocessing stage
+    (:mod:`repro.core.compress`): compress a bucket only when its padded row
+    space exceeds the sketch width — otherwise the "core" would be as large
+    as the data and the QB pass pure overhead.
+
+    ``shapes`` is a list of ``(i_pad, c_pad)`` pairs (``BucketPlan.shapes``
+    or the realized buckets' padded shapes); returns one bool per bucket.
+    """
+    if isinstance(shapes, BucketPlan):
+        shapes = shapes.shapes
+    if sketch_dim < 1:
+        raise ValueError(f"sketch_dim must be >= 1, got {sketch_dim}")
+    return [int(ip) > int(sketch_dim) for ip, _ in shapes]

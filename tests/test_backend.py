@@ -186,7 +186,7 @@ def test_fit_smoke_backend_trajectories(mode1_reuse):
     bt = _fit_data()
     hists = {}
     for backend in ("jnp", "pallas"):
-        opts = Parafac2Options(rank=3, nonneg=True, dtype=jnp.float32,
+        opts = Parafac2Options(rank=3, dtype=jnp.float32,
                                backend=backend, mode1_reuse=mode1_reuse)
         state, hist = fit(bt, opts, max_iters=5, tol=0.0, seed=0)
         assert np.isfinite(hist).all()
@@ -199,7 +199,7 @@ def test_als_step_auto_backend_runs():
     """auto backend end-to-end through als_step (picks jnp off-TPU, pallas
     on TPU — either way the step must be finite and jit-compatible)."""
     bt = _fit_data(seed=8)
-    opts = Parafac2Options(rank=3, nonneg=True, dtype=jnp.float32,
+    opts = Parafac2Options(rank=3, dtype=jnp.float32,
                            backend="auto")
     s0 = init_state(bt, opts, seed=0)
     s1 = jax.jit(lambda s: als_step(bt, s, opts))(s0)

@@ -1,0 +1,82 @@
+"""benchmarks/compare.py gate semantics: renames and new namespaces must
+never crash the gate — they skip with a notice; real regressions still trip."""
+import json
+
+import pytest
+
+from benchmarks import compare as cmp
+
+
+def _ns(rows):
+    """A namespace whose leaves are {case: {seconds_per_iter: v}}."""
+    return {case: {"seconds_per_iter": v} for case, v in rows.items()}
+
+
+def test_identical_runs_pass():
+    base = _ns({"a/host": 1.0, "b/host": 2.0, "c/host": 3.0})
+    regs, rows = cmp.compare_namespace("als", base, base, threshold=1.5)
+    assert regs == []
+    assert all(flag != "REGRESSED" for _, _, flag in rows)
+
+
+def test_real_regression_trips():
+    base = _ns({"a/host": 1.0, "b/host": 1.0, "c/host": 1.0, "d/host": 1.0})
+    cur = _ns({"a/host": 1.0, "b/host": 1.0, "c/host": 1.0, "d/host": 10.0})
+    regs, _ = cmp.compare_namespace("als", base, cur, threshold=1.5)
+    assert len(regs) == 1 and "d/host" in regs[0]
+
+
+def test_axis_rename_skips_with_one_notice():
+    """A leaf present only in current (axis rename / grown grid) is reported
+    as ONE 'new leaf, ungated' line — not gated, not a KeyError, not a wall
+    of per-row noise."""
+    base = _ns({"a/host/nonneg": 1.0, "b/host/nonneg": 1.0,
+                "c/host/nonneg": 1.0})
+    cur = _ns({"a/host/nonneg": 1.0, "b/host/nonneg": 1.0,
+               "c/host/nonneg": 1.0,
+               "a/host/nonneg/rsvd": 0.2, "b/host/nonneg/rsvd": 0.2})
+    regs, rows = cmp.compare_namespace("als", base, cur, threshold=1.5)
+    assert regs == []
+    notices = [r for r in rows if "new leaf" in r[0]]
+    assert len(notices) == 1 and "2 new leaf" in notices[0][0]
+    # and the reverse direction (row gone from current) stays non-fatal
+    regs, rows = cmp.compare_namespace("als", cur, base, threshold=1.5)
+    assert regs == []
+    assert sum("MISSING in current" in v for _, v, _ in rows) == 2
+
+
+def test_new_namespace_is_ungated(tmp_path, capsys):
+    """--current naming a namespace absent from the baseline (or present as
+    a non-dict stub) skips gracefully with exit code 0."""
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(
+        {"als": _ns({"a/host": 1.0}), "als_rsvd": "placeholder"}))
+    cur1 = tmp_path / "c1.json"
+    cur1.write_text(json.dumps(_ns({"a/host/rsvd": 0.5})))
+    cur2 = tmp_path / "c2.json"
+    cur2.write_text(json.dumps(_ns({"a/host/rsvd": 0.5})))
+    rc = cmp.main(["--baseline", str(baseline),
+                   "--current", f"brand_new={cur1}",
+                   "--current", f"als_rsvd={cur2}"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert out.count("new namespace, ungated") == 2
+
+
+def test_speedup_leaves_gate_without_normalization():
+    base = {"x": {"speedup_vs_uncompressed_per_iter": 4.0}}
+    good = {"x": {"speedup_vs_uncompressed_per_iter": 3.5}}
+    bad = {"x": {"speedup_vs_uncompressed_per_iter": 1.5}}
+    regs, _ = cmp.compare_namespace("als_rsvd", base, good, threshold=1.5)
+    assert regs == []
+    regs, _ = cmp.compare_namespace("als_rsvd", base, bad, threshold=1.5)
+    assert len(regs) == 1
+
+
+def test_skip_substring_exempts_but_reports():
+    base = _ns({"a/pallas": 1.0, "a/host": 1.0, "b/host": 1.0, "c/host": 1.0})
+    cur = _ns({"a/pallas": 50.0, "a/host": 1.0, "b/host": 1.0, "c/host": 1.0})
+    regs, rows = cmp.compare_namespace("als", base, cur, threshold=1.5,
+                                       skip=("/pallas",))
+    assert regs == []
+    assert any(flag == "skipped (not gated)" for _, _, flag in rows)

@@ -1,7 +1,7 @@
 """Constraint-layer suite: spec parsing/registry, prox operators, AO-ADMM vs
 HALS agreement, l1 sparsity / smooth TV behaviour, engine parity with ADMM
-aux state in the carry, and the legacy ``nonneg`` deprecation shim."""
-import warnings
+aux state in the carry, and the removed ``nonneg`` flag's fail-fast
+TypeError with its migration hint."""
 
 import numpy as np
 import pytest
@@ -324,27 +324,24 @@ def test_smooth_engine_parity(choa_bt):
 # legacy nonneg flag: deprecation shim + default-path equivalence
 # ---------------------------------------------------------------------------
 
-def test_legacy_nonneg_flag_bitwise_equals_constraints(choa_bt):
-    """The deprecated bool and its constraint-spec translation must walk the
-    SAME trajectory bitwise — the acceptance bar for the refactor."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = Parafac2Options(rank=3, nonneg=True, dtype=f64)
+def test_legacy_nonneg_flag_removed_with_migration_hint(choa_bt):
+    """The PR-4 deprecation shim is gone: passing the old bool raises
+    TypeError naming the constraints= replacement, and the explicit spec
+    dict walks the SAME trajectory as the unset (paper-default) path —
+    the bitwise guarantee the shim used to provide now holds between the
+    default and its spelled-out form."""
+    for legacy in (True, False):
+        with pytest.raises(TypeError, match="constraints="):
+            Parafac2Options(rank=3, nonneg=legacy, dtype=f64)
+    with pytest.raises(TypeError, match="removed"):
+        Parafac2Options(rank=3, nonneg=True, constraints={"v": "none"})
     new = Parafac2Options(rank=3, constraints={"v": "nonneg", "w": "nonneg"},
                           dtype=f64)
     default = Parafac2Options(rank=3, dtype=f64)      # unset -> paper default
-    _, hl = fit(choa_bt, legacy, max_iters=8, tol=0.0, seed=0)
+    assert default.constraint_specs() == {"v": "nonneg", "w": "nonneg"}
     _, hn = fit(choa_bt, new, max_iters=8, tol=0.0, seed=0)
     _, hd = fit(choa_bt, default, max_iters=8, tol=0.0, seed=0)
-    np.testing.assert_allclose(np.asarray(hn), np.asarray(hl), rtol=0, atol=0)
-    np.testing.assert_allclose(np.asarray(hd), np.asarray(hl), rtol=0, atol=0)
-
-
-def test_legacy_nonneg_flag_warns_and_conflicts():
-    with pytest.warns(DeprecationWarning, match="nonneg"):
-        Parafac2Options(rank=3, nonneg=False).constraint_specs()
-    with pytest.raises(ValueError, match="not both"):
-        Parafac2Options(rank=3, nonneg=True, constraints={"v": "none"})
+    np.testing.assert_allclose(np.asarray(hd), np.asarray(hn), rtol=0, atol=0)
 
 
 def test_default_path_aux_is_empty(choa_bt):

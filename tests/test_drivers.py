@@ -61,6 +61,15 @@ def test_decompose_driver_engine_tol_json(tmp_path):
     assert blob["iters"] == len(blob["fit_history"])
     assert blob["seconds_per_iter"] > 0
     assert blob["fit"] == pytest.approx(scan["fit"])
+    # the unified driver schema (repro.launch.summary) rides along with the
+    # historical top-level payload keys
+    from repro.launch.summary import SCHEMA_VERSION
+    assert blob["schema_version"] == SCHEMA_VERSION
+    assert blob["kind"] == "decompose"
+    ro = blob["resolved_options"]
+    assert ro["engine"] == "scan" and ro["rank"] == 3
+    assert ro["constraints"] == blob["constraints"]
+    assert ro["compress"] == {"spec": "none"}
 
 
 def test_decompose_constraint_roundtrips_through_json(tmp_path):
@@ -112,6 +121,47 @@ def test_decompose_invalid_constraint_lists_registered():
         ])
 
 
+def test_decompose_compress_axis_roundtrips_through_json(tmp_path):
+    """--compress routes the fit through the randomized-compression stage and
+    the resolved spec (with its sketch geometry) lands in the summary."""
+    import json
+
+    path = tmp_path / "out.json"
+    out = decompose_mod.main([
+        "--dataset", "synthetic", "--scale", "0.003", "--rank", "3",
+        "--iters", "8", "--compress", "rsvd:8:4:1", "--json", str(path),
+    ])
+    assert np.isfinite(out["fit"]) and 0.0 < out["fit"] <= 1.0
+    blob = json.loads(path.read_text())
+    assert blob["compress"] == "rsvd:8:4:1"
+    assert blob["resolved_options"]["compress"] == {
+        "spec": "rsvd:8:4:1", "sketch_dim": 12, "power_iters": 1}
+
+
+def test_decompose_invalid_compress_lists_registered():
+    from repro.core.compress import available
+
+    with pytest.raises(ValueError) as ei:
+        decompose_mod.main([
+            "--dataset", "synthetic", "--scale", "0.003", "--rank", "3",
+            "--iters", "2", "--compress", "bogus",
+        ])
+    msg = str(ei.value)
+    assert "registered preprocessors" in msg
+    for name in available():
+        assert name in msg
+
+
+def test_run_summary_rejects_schema_key_collisions():
+    from repro.launch.summary import run_summary
+
+    with pytest.raises(ValueError, match="collide"):
+        run_summary("decompose", None, schema_version=99)
+    blob = run_summary("dryrun", {"rank": 4}, fit=0.5)
+    assert blob["kind"] == "dryrun" and blob["resolved_options"]["rank"] == 4
+    assert blob["fit"] == 0.5
+
+
 def test_sample_token_greedy_and_topk():
     rng = jax.random.PRNGKey(0)
     logits = jnp.asarray([[[0.1, 5.0, 0.2, 0.3]]], jnp.float32)
@@ -158,6 +208,14 @@ def test_stream_driver_json_summary(tmp_path):
     assert blob["warm"]["fit"] == out["warm"]["fit"]
     assert blob["smooth_lam"] == 0.1
     assert blob["n_subjects"] > blob["warm"]["n_subjects"]  # stream grew K
+    # the same unified schema block decompose.py stamps
+    from repro.launch.summary import SCHEMA_VERSION
+    assert blob["schema_version"] == SCHEMA_VERSION
+    assert blob["kind"] == "stream"
+    ro = blob["resolved_options"]
+    assert ro["rank"] == 3 and ro["format"] == "auto"
+    assert ro["constraints"] == blob["constraints"]
+    assert ro["smooth_lam"] == 0.1
 
 
 def test_stream_driver_replays_appends_file(tmp_path):

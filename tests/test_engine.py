@@ -31,7 +31,7 @@ def choa_bt():
 
 def _traj(bt, engine, *, backend="jnp", check_every=4, iters=12, tol=0.0,
           rank=3, dtype=jnp.float64):
-    opts = Parafac2Options(rank=rank, nonneg=True, dtype=dtype, engine=engine,
+    opts = Parafac2Options(rank=rank, dtype=dtype, engine=engine,
                            backend=backend, check_every=check_every)
     state, hist = fit(bt, opts, max_iters=iters, tol=tol, seed=0)
     return state, np.asarray(hist)
@@ -61,7 +61,7 @@ def test_mesh_matches_host_trajectory(choa_bt):
 
 
 def test_mesh_bucketed_w_matches_host(choa_bt):
-    opts_kw = dict(rank=3, nonneg=True, dtype=jnp.float64, w_layout="bucketed")
+    opts_kw = dict(rank=3, dtype=jnp.float64, w_layout="bucketed")
     sh, hh = fit(choa_bt, Parafac2Options(engine="host", **opts_kw),
                  max_iters=8, tol=0.0, seed=0)
     sm, hm = fit(choa_bt, Parafac2Options(engine="mesh", check_every=4, **opts_kw),
@@ -147,7 +147,7 @@ def test_mesh_engine_multidevice_subprocess():
         data = choa_like(scale=5e-5, seed=0)
         bt = bucketize(data, max_buckets=2, dtype=jnp.float64,
                        subject_align=4)
-        kw = dict(rank=3, nonneg=True, dtype=jnp.float64)
+        kw = dict(rank=3, dtype=jnp.float64)
         _, hh = fit(bt, Parafac2Options(engine="host", **kw),
                     max_iters=8, tol=0.0, seed=0)
         _, hm = fit(bt, Parafac2Options(engine="mesh", check_every=4, **kw),

@@ -17,7 +17,7 @@ def _exact_data(seed=1, K=20, J=30, R=4):
 
 def test_fit_monotone_nondecreasing():
     bt, _ = _exact_data()
-    opts = Parafac2Options(rank=4, nonneg=True, dtype=jnp.float64)
+    opts = Parafac2Options(rank=4, dtype=jnp.float64)
     _, hist = fit(bt, opts, max_iters=40, tol=0.0)
     diffs = np.diff(hist)
     assert (diffs > -1e-8).all(), f"fit decreased: min diff {diffs.min()}"
@@ -25,7 +25,7 @@ def test_fit_monotone_nondecreasing():
 
 def test_exact_recovery_high_fit():
     bt, _ = _exact_data()
-    opts = Parafac2Options(rank=4, nonneg=True, dtype=jnp.float64)
+    opts = Parafac2Options(rank=4, dtype=jnp.float64)
     _, hist = fit(bt, opts, max_iters=250, tol=1e-12)
     assert hist[-1] > 0.95, hist[-1]
 
@@ -35,7 +35,7 @@ def test_sparse_data_fit_reasonable():
         n_subjects=25, n_cols=40, max_rows=20, rank=3, density=0.5, seed=3
     )
     bt = bucketize(data, max_buckets=3, dtype=jnp.float64)
-    opts = Parafac2Options(rank=3, nonneg=True, dtype=jnp.float64)
+    opts = Parafac2Options(rank=3, dtype=jnp.float64)
     _, hist = fit(bt, opts, max_iters=30, tol=0.0)
     assert hist[-1] > 0.3
     assert (np.diff(hist) > -1e-8).all()
@@ -44,7 +44,7 @@ def test_sparse_data_fit_reasonable():
 @pytest.mark.parametrize("method", ["svd", "gram_eigh", "newton_schulz"])
 def test_procrustes_methods_equivalent_fit(method):
     bt, _ = _exact_data(seed=5)
-    opts = Parafac2Options(rank=4, nonneg=True, procrustes=method, dtype=jnp.float64)
+    opts = Parafac2Options(rank=4, procrustes=method, dtype=jnp.float64)
     _, hist = fit(bt, opts, max_iters=30, tol=0.0)
     assert hist[-1] > 0.7, (method, hist[-1])
 
@@ -52,8 +52,8 @@ def test_procrustes_methods_equivalent_fit(method):
 def test_mode1_reuse_bitwise_equivalent():
     """The beyond-paper mode-1 cache must not change a single iteration."""
     bt, _ = _exact_data(seed=9)
-    base = Parafac2Options(rank=4, nonneg=True, mode1_reuse=False, dtype=jnp.float64)
-    reuse = Parafac2Options(rank=4, nonneg=True, mode1_reuse=True, dtype=jnp.float64)
+    base = Parafac2Options(rank=4, mode1_reuse=False, dtype=jnp.float64)
+    reuse = Parafac2Options(rank=4, mode1_reuse=True, dtype=jnp.float64)
     s0 = init_state(bt, base, seed=0)
     s_a = als_step(bt, s0, base)
     s_b = als_step(bt, s0, reuse)
@@ -65,7 +65,7 @@ def test_mode1_reuse_bitwise_equivalent():
 
 def test_nonneg_factors_are_nonneg():
     bt, _ = _exact_data(seed=11)
-    opts = Parafac2Options(rank=4, nonneg=True, dtype=jnp.float64)
+    opts = Parafac2Options(rank=4, dtype=jnp.float64)
     state, _ = fit(bt, opts, max_iters=15, tol=0.0)
     assert (np.asarray(state.V) >= 0).all()
     assert (np.asarray(state.W) >= 0).all()
@@ -75,7 +75,7 @@ def test_uk_orthogonality_structure():
     """U_k^T U_k must be (approximately) invariant over k: the PARAFAC2
     constraint the Q_k H factorization enforces by construction."""
     bt, _ = _exact_data(seed=13)
-    opts = Parafac2Options(rank=4, nonneg=True, dtype=jnp.float64)
+    opts = Parafac2Options(rank=4, dtype=jnp.float64)
     state, _ = fit(bt, opts, max_iters=50, tol=0.0)
     uks = reconstruct_uk(bt, state, opts)
     grams = [u.T @ u for u in uks.values() if u.shape[0] >= 4]
@@ -90,8 +90,8 @@ def test_bucketed_w_layout_equivalent():
     from repro.core.parafac2 import w_global
 
     bt, _ = _exact_data(seed=21)
-    g = Parafac2Options(rank=4, nonneg=True, dtype=jnp.float64, w_layout="global")
-    b = Parafac2Options(rank=4, nonneg=True, dtype=jnp.float64, w_layout="bucketed")
+    g = Parafac2Options(rank=4, dtype=jnp.float64, w_layout="global")
+    b = Parafac2Options(rank=4, dtype=jnp.float64, w_layout="bucketed")
     sg = init_state(bt, g, seed=0)
     sb = init_state(bt, b, seed=0)
     for _ in range(3):
@@ -109,7 +109,7 @@ def test_reconstruction_error_matches_fit():
         n_subjects=10, n_cols=20, max_rows=15, rank=3, density=1.0, seed=17
     )
     bt = bucketize(data, max_buckets=2, dtype=jnp.float64)
-    opts = Parafac2Options(rank=3, nonneg=True, dtype=jnp.float64)
+    opts = Parafac2Options(rank=3, dtype=jnp.float64)
     state, _ = fit(bt, opts, max_iters=25, tol=0.0)
     uks = reconstruct_uk(bt, state, opts)
     V, W = np.asarray(state.V), np.asarray(state.W)

@@ -151,9 +151,9 @@ def test_fit_parity_backends(choa_small, backend):
     """Whole-decomposition parity: SCOO final fit within 1e-8 of the CC/jnp
     reference (f64, the acceptance-criterion command shape)."""
     cc, sc = _pair(choa_small, max_buckets=2, col_align=128)
-    opts_cc = Parafac2Options(rank=5, nonneg=True, dtype=jnp.float64,
+    opts_cc = Parafac2Options(rank=5, dtype=jnp.float64,
                               backend="jnp")
-    opts_sc = Parafac2Options(rank=5, nonneg=True, dtype=jnp.float64,
+    opts_sc = Parafac2Options(rank=5, dtype=jnp.float64,
                               backend=backend)
     _, h_cc = fit(cc, opts_cc, max_iters=20, tol=0.0, seed=0)
     _, h_sc = fit(sc, opts_sc, max_iters=20, tol=0.0, seed=0)
@@ -180,7 +180,7 @@ def test_engine_parity_scoo(choa_small, engine, atol):
     jit); mesh to eps (shard_map compiles the step differently)."""
     _, sc = _pair(choa_small, max_buckets=2, col_align=128,
                   subject_align=len(jax.devices()))
-    kw = dict(rank=3, nonneg=True, dtype=jnp.float64, backend="auto",
+    kw = dict(rank=3, dtype=jnp.float64, backend="auto",
               check_every=4)
     _, h_host = fit(sc, Parafac2Options(engine="host", **kw),
                     max_iters=12, tol=0.0, seed=0)
@@ -195,7 +195,7 @@ def test_engine_parity_scoo(choa_small, engine, atol):
 def test_fit_parity_bucketed_w(choa_small):
     """The bucketed W layout rides the SCOO path unchanged."""
     cc, sc = _pair(choa_small, max_buckets=2, col_align=128)
-    kw = dict(rank=3, nonneg=True, dtype=jnp.float64, w_layout="bucketed")
+    kw = dict(rank=3, dtype=jnp.float64, w_layout="bucketed")
     _, h_cc = fit(cc, Parafac2Options(backend="jnp", **kw),
                   max_iters=10, tol=0.0, seed=0)
     _, h_sc = fit(sc, Parafac2Options(backend="auto", **kw),
@@ -265,7 +265,7 @@ def test_mixed_format_fit_runs(choa_small):
                         nnz_counts=data.nnz_counts(), max_buckets=2)
     bt = bucketize(data, dtype=jnp.float64, plan=plan, formats=["cc", "scoo"])
     assert [bucket_format(b) for b in bt.buckets] == ["cc", "scoo"]
-    _, hist = fit(bt, Parafac2Options(rank=3, nonneg=True, dtype=jnp.float64,
+    _, hist = fit(bt, Parafac2Options(rank=3, dtype=jnp.float64,
                                       backend="auto"),
                   max_iters=5, tol=0.0, seed=0)
     assert len(hist) == 5 and np.isfinite(hist).all()
