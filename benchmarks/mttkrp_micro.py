@@ -10,7 +10,10 @@ backend API). The format axis also times the two formation stages the
 whole-iteration cost is dominated by on sparse data — ``xkv`` (X_k V) and
 ``project`` (Y_k = Q_k^T X_k) — which the mode-level rows never see.
 ``--json PATH`` additionally writes the timings as a JSON artifact (the CI
-perf trajectory, BENCH_mttkrp.json).
+perf trajectory, BENCH_mttkrp.json), including a ``dispatches_per_iter``
+block per backend — the bucket-stage dispatch count one full ALS iteration
+costs (staged backends: 5/bucket; the fused megakernel route: 4/bucket, the
+exact-parity fusion floor — see repro.kernels.fused).
 """
 from __future__ import annotations
 
@@ -21,8 +24,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bucketize
-from repro.core.backend import get_backend
+from repro.core import Parafac2Options, als_step, bucketize, init_state
+from repro.core.backend import dispatch_tally, get_backend
 from repro.core.baseline import baseline_mode1, baseline_mode2, baseline_mode3, dense_y
 from repro.sparse import random_irregular
 from benchmarks.common import calibrate, emit, time_call
@@ -35,13 +38,19 @@ def main(argv=None):
     ap.add_argument("--rank", type=int, default=40)
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--backends", default="jnp,pallas",
-                    help="comma list of MTTKRP backends to time side by side")
+                    help="comma list of MTTKRP backends to time side by side "
+                         "(jnp,pallas,scoo,fused,auto)")
+    ap.add_argument("--fused", action="store_true",
+                    help="shorthand: append 'fused' to the backends axis")
     ap.add_argument("--formats", default="cc",
                     help="comma list of device formats (cc,scoo); non-CC "
                          "rows get a /<fmt> suffix")
     ap.add_argument("--json", default="",
                     help="write per-mode/backend timings to this JSON file")
     args = ap.parse_args(argv)
+    backends = [s.strip() for s in args.backends.split(",") if s.strip()]
+    if args.fused and "fused" not in backends:
+        backends.append("fused")
 
     # geometry mirrors the paper's sparse regime: few active columns (c_k)
     # out of many variables J — that is where the reformulation wins.
@@ -87,7 +96,7 @@ def main(argv=None):
                           "calib_seconds": calibrate()}}
     for fmt, bt in bts.items():
         sfx = "" if fmt == "cc" else f"/{fmt}"
-        for bname in [s.strip() for s in args.backends.split(",") if s.strip()]:
+        for bname in backends:
             be = get_backend(bname)
             buckets = bt.buckets
             # per-bucket projected representations (untimed, like Ycs): the
@@ -141,17 +150,36 @@ def main(argv=None):
             t_x, _ = time_call(jax.jit(run_xkv), V, iters=args.iters)
             emit(f"mttkrp/xkv/{bname}{sfx}", t_x, "")
             results[f"xkv/{bname}{sfx}"] = {"us_per_call": t_x * 1e6}
-            # the scoo backend's project_bucket on SCOO buckets is Q
-            # pass-through BY DESIGN (Yc is never materialized; the cost
-            # moves into the triplet contractions timed above) — a timing
-            # row for it would be a meaningless ~0
-            if not (fmt == "scoo" and bname in ("scoo", "auto")):
+            # the scoo backend's project_bucket on SCOO buckets — and the
+            # fused backend's on EVERY bucket — is Q pass-through BY DESIGN
+            # (Yc is never materialized; the cost moves into the fused/
+            # triplet contractions timed above) — a timing row for it would
+            # be a meaningless ~0
+            if not (bname == "fused"
+                    or (fmt == "scoo" and bname in ("scoo", "auto"))):
                 t_p, _ = time_call(jax.jit(run_project), H, iters=args.iters)
                 emit(f"mttkrp/project/{bname}{sfx}", t_p, "")
                 results[f"project/{bname}{sfx}"] = {"us_per_call": t_p * 1e6}
     for name, (t_bl, _) in base.items():
         emit(f"mttkrp/{name}/baseline", t_bl, "")
         results[f"{name}/baseline"] = {"us_per_call": t_bl * 1e6}
+
+    # bucket-stage dispatch count per full ALS iteration (ticks fire at
+    # trace time, so eval_shape counts one als_step without running it):
+    # staged = 5/bucket, fused = 4/bucket (the exact-parity fusion floor)
+    bt_cc = bts.get("cc", bt0)
+    for bname in backends:
+        opts = Parafac2Options(rank=R, dtype=jnp.float32, backend=bname)
+        s0 = init_state(bt_cc, opts, seed=0)
+        with dispatch_tally() as tally:
+            jax.eval_shape(lambda s: als_step(bt_cc, s, opts), s0)
+        per_iter = int(sum(tally.values()))
+        per_bucket = per_iter / max(len(bt_cc.buckets), 1)
+        emit(f"mttkrp/dispatches_per_iter/{bname}", 0.0,
+             f"total={per_iter} per_bucket={per_bucket:.1f}")
+        results[f"dispatches_per_iter/{bname}"] = {
+            "total": per_iter, "per_bucket": per_bucket,
+            "by_stage": dict(tally)}
 
     if args.json:
         with open(args.json, "w") as f:

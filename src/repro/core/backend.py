@@ -17,12 +17,32 @@ and the shared stages. Four implementations:
     flat COO triplets directly via :mod:`repro.kernels.scoo` and the
     projected slices Y_k are NEVER materialized — ``project_bucket`` carries
     Q itself. CC buckets delegate to ``jnp``.
+``fused``
+    The fused ALS megakernel route (:mod:`repro.kernels.fused`): per CC
+    bucket per iteration, four fused launches stream each subject's slab
+    through VMEM with double-buffered DMA and write only the small
+    [I,R]/[R,R]/[C,R] results — the projected Y_k is NEVER materialized
+    (``project_bucket`` carries Q, like the SCOO route). SCOO buckets
+    delegate to ``scoo``. ``dispatch_tally`` measures the collapse from the
+    staged path's five streaming stage launches to four (four, not one,
+    because the Procrustes eigendecomposition and the H-/V-solves are global
+    sync points — see kernels/fused.py).
 ``auto``
     Per-bucket dispatch: SCOO buckets take the ``scoo`` native route; CC
-    buckets go to ``pallas`` on TPU for kernel-friendly geometry (f32/bf16
+    buckets go to ``fused`` on TPU for kernel-friendly geometry (f32/bf16
     with R a multiple of 8 and C a multiple of 128 — the MXU sublane/lane
-    quanta the ``col_align=128`` bucketizer default produces) and ``jnp``
+    quanta the ``col_align=128`` bucketizer default produces), ``pallas``
+    for the array-level CC contractions at the same geometry, and ``jnp``
     everywhere else, including all CPU/GPU runs.
+
+Every backend also takes a ``precision`` knob ("f32" | "bf16" | "f16",
+``Parafac2Options.precision`` / ``get_backend(name, precision)``): below
+f32, the large streamed operands (the vals slab, Vg, and the staged Y_k)
+are cast half-width before each contraction while every dot still
+accumulates in f32 via ``kernels.common.accum_dtype`` — bf16 x bf16
+products are exact in f32 (8-bit mantissas), so only the cast of the
+inputs loses bits, and the streamed HBM bytes halve. ``precision="f32"``
+is bitwise-identical to the historical paths.
 
 Two API levels. The *bucket-level* stages (``xkv_bucket`` /
 ``project_bucket`` / ``ykv_bucket`` / ``mode{1,2,3}_bucket``) are what
@@ -50,7 +70,9 @@ and benchmarks. See docs/ARCHITECTURE.md (stage 4½ and the SCOO stage).
 from __future__ import annotations
 
 import abc
-from typing import List, Optional, Sequence
+import collections
+import contextlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,16 +80,58 @@ import jax.numpy as jnp
 from repro.core import spartan
 from repro.core.irregular import SparseBucket
 from repro.dist.sharding import shard
+from repro.kernels.common import (PRECISIONS, accum_dtype, compute_cast,
+                                  fold_subject_mask)
 
 __all__ = [
     "MttkrpBackend",
     "JnpBackend",
     "PallasBackend",
     "SparseBackend",
+    "FusedBackend",
     "AutoBackend",
     "BACKENDS",
     "get_backend",
+    "dispatch_tally",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch tally: how many per-bucket stage launches stream large operands
+# ---------------------------------------------------------------------------
+
+_TALLY: Optional[collections.Counter] = None
+
+
+@contextlib.contextmanager
+def dispatch_tally():
+    """Count the per-bucket backend stage launches that stream I-/C-sized
+    operands (the slab, XkV/Q, or Yc) — the launches the fused megakernel
+    route collapses. Stages that only touch [Kb,R,R]-and-smaller tiles
+    (mode-1/mode-3 from a cached YkV) are not counted.
+
+    Counting happens when the backend methods RUN (eagerly or at jit trace
+    time), so wrap one untraced/tracing ``als_step`` evaluation::
+
+        with dispatch_tally() as t:
+            jax.eval_shape(lambda s: als_step(data, s, opts), state)
+        per_bucket = sum(t.values()) / len(data.buckets)
+
+    The staged CC path tallies 5 per bucket per iteration (procrustes_b,
+    project, mode1, mode2, ykv); the fused route tallies 4 — the standalone
+    projection pass disappears (``project_bucket`` carries Q).
+    """
+    global _TALLY
+    prev, _TALLY = _TALLY, collections.Counter()
+    try:
+        yield _TALLY
+    finally:
+        _TALLY = prev
+
+
+def _tick(stage: str) -> None:
+    if _TALLY is not None:
+        _TALLY[stage] += 1
 
 
 class MttkrpBackend(abc.ABC):
@@ -78,9 +142,26 @@ class MttkrpBackend(abc.ABC):
       Wb [Kb, R] W rows; masks 1.0 = real, 0.0 = padding.
     Subclasses implement ``_mode1`` / ``_mode2_compact`` / ``_mode3``; the
     public methods add the uniform subject-axis sharding constraints.
+
+    ``precision`` ("f32" default) below f32 stages the large streamed
+    operands half-width via :func:`repro.kernels.common.compute_cast` while
+    accumulating f32 (``accum_dtype``); "f32" keeps every path bitwise
+    identical to the unconfigured backend.
     """
 
     name: str = "?"
+
+    def __init__(self, precision: str = "f32"):
+        if precision not in PRECISIONS:
+            raise ValueError(
+                f"unknown compute precision {precision!r}; "
+                f"choose from {PRECISIONS}")
+        self.precision = precision
+
+    def _pc(self, x: Optional[jax.Array]) -> Optional[jax.Array]:
+        """Cast a streamed operand to the compute precision (identity at
+        "f32" — the configured-precision paths stay bitwise otherwise)."""
+        return compute_cast(x, self.precision)
 
     # -- uniform sharding ---------------------------------------------------
     @staticmethod
@@ -109,7 +190,34 @@ class MttkrpBackend(abc.ABC):
     def xkv_bucket(self, b, V: jax.Array,
                    Vg: Optional[jax.Array] = None) -> jax.Array:
         """X_k V [Kb, I_pad, R] — the Procrustes-step input."""
+        if self.precision != "f32" and not isinstance(b, SparseBucket):
+            Vg = b.gather_v(V) if Vg is None else Vg
+            out = jnp.einsum(
+                "kic,kcr->kir", self._pc(b.vals), self._pc(Vg),
+                preferred_element_type=accum_dtype(b.vals))
+            return self.shard_subjects(out)
         return self.shard_subjects(b.xk_times_v(V, Vg))
+
+    def procrustes_b_bucket(self, b, H: jax.Array, Wb: jax.Array,
+                            V: jax.Array, Vg: Optional[jax.Array] = None):
+        """Step-1 pair for one bucket: (XkV [Kb,I,R], B [Kb,I,R]) with
+        B_k = (X_k V * w_k) H^T — the Procrustes input. The staged default
+        is xkv + a small einsum; the fused backend forms both in one slab
+        pass."""
+        _tick("procrustes_b")
+        XkV = self.xkv_bucket(b, V, Vg)
+        B = jnp.einsum("kir,lr->kil", XkV * Wb[:, None, :], H)
+        return XkV, B
+
+    def mode1_xkv_bucket(self, b, Q: jax.Array, XkV: jax.Array,
+                         Wb: jax.Array) -> jax.Array:
+        """Partial M1 [R,R] via the mode-1 reuse identity
+        Y_k V = Q_k^T (X_k V) — no slab pass, but the [Kb,I,R] operands
+        stream. The fused backend reduces M1 in the same dispatch that
+        forms the per-subject YkV, which is never written back."""
+        _tick("mode1")
+        YkV = jnp.einsum("kir,kil->krl", Q, XkV)
+        return self.mode1(None, None, Wb, b.subject_mask, YkV=YkV)
 
     def sketch_bucket(self, b, Omega: jax.Array,
                       Og: Optional[jax.Array] = None) -> jax.Array:
@@ -123,24 +231,37 @@ class MttkrpBackend(abc.ABC):
 
     def project_bucket(self, b, Q: jax.Array):
         """Per-bucket projected representation consumed by the *_bucket
-        stages below: the compact Yc [Kb, R, C] on the dense route."""
+        stages below: the compact Yc [Kb, R, C] on the dense route (staged
+        half-width when ``precision`` is below f32)."""
+        _tick("project")
+        if self.precision != "f32" and not isinstance(b, SparseBucket):
+            Yc = jnp.einsum(
+                "kir,kic->krc", self._pc(Q), self._pc(b.vals),
+                preferred_element_type=accum_dtype(b.vals))
+            return self.shard_subjects(self._pc(Yc))
         return self.shard_subjects(b.project(Q))
 
     def ykv_bucket(self, b, proj, V: jax.Array) -> jax.Array:
         """Y_k V [Kb, R, R] for factor ``V`` (the W-update/fit G product)."""
-        return self.ykv(proj, b.gather_v(V))
+        _tick("ykv")
+        return self.ykv(proj, self._pc(b.gather_v(V)))
 
     def mode1_bucket(self, b, proj, Wb: jax.Array,
                      V: Optional[jax.Array] = None, *, YkV=None) -> jax.Array:
-        Vg = None if YkV is not None else b.gather_v(V)
+        if YkV is None:
+            _tick("mode1")
+        Vg = None if YkV is not None else self._pc(b.gather_v(V))
         return self.mode1(proj, Vg, Wb, b.subject_mask, YkV=YkV)
 
     def mode2_bucket(self, b, proj, H: jax.Array, Wb: jax.Array) -> jax.Array:
+        _tick("mode2")
         return self.mode2_compact(proj, H, Wb, b.col_mask, b.subject_mask)
 
     def mode3_bucket(self, b, proj, H: jax.Array,
                      V: Optional[jax.Array] = None, *, YkV=None) -> jax.Array:
-        Vg = None if YkV is not None else b.gather_v(V)
+        if YkV is None:
+            _tick("mode3")
+        Vg = None if YkV is not None else self._pc(b.gather_v(V))
         return self.mode3(proj, Vg, H, b.subject_mask, YkV=YkV)
 
     # -- per-bucket contractions --------------------------------------------
@@ -263,15 +384,18 @@ class PallasBackend(MttkrpBackend):
             from repro.kernels import scoo
             Vg = b.gather_v(V) if Vg is None else Vg
             return self.shard_subjects(scoo.xk_times_v(
-                self._k32(b.vals), b.rows, b.lcols, self._k32(Vg), b.i_pad,
+                self._pc(self._k32(b.vals)), b.rows, b.lcols,
+                self._pc(self._k32(Vg)), b.i_pad,
                 nnz_counts=b.nnz_counts, use_pallas=True))
         return super().xkv_bucket(b, V, Vg)
 
     def project_bucket(self, b, Q):
         if isinstance(b, SparseBucket):
             from repro.kernels import scoo
+            _tick("project")
             return self.shard_subjects(scoo.project(
-                self._k32(b.vals), b.rows, b.lcols, self._k32(Q), b.c_pad,
+                self._pc(self._k32(b.vals)), b.rows, b.lcols,
+                self._k32(Q), b.c_pad,
                 nnz_counts=b.nnz_counts, use_pallas=True))
         return super().project_bucket(b, Q)
 
@@ -289,8 +413,10 @@ class SparseBackend(MttkrpBackend):
 
     name = "scoo"
 
-    def __init__(self, inner: Optional[MttkrpBackend] = None):
-        self._inner = inner if inner is not None else JnpBackend()
+    def __init__(self, inner: Optional[MttkrpBackend] = None,
+                 precision: str = "f32"):
+        super().__init__(precision)
+        self._inner = inner if inner is not None else JnpBackend(precision)
 
     # -- array-level CC contract: delegate wholesale ------------------------
     def ykv(self, Yc, Vg):
@@ -308,8 +434,9 @@ class SparseBackend(MttkrpBackend):
     # -- bucket-level stages: SCOO-native, Yc-free --------------------------
     def _ykv_native(self, b: SparseBucket, Q, V):
         from repro.kernels import scoo
-        return scoo.ykv_scoo(b.vals, b.rows, b.lcols,
-                             self.shard_subjects(Q), b.gather_v(V))
+        return scoo.ykv_scoo(self._pc(b.vals), b.rows, b.lcols,
+                             self.shard_subjects(Q),
+                             self._pc(b.gather_v(V)))
 
     def project_bucket(self, b, Q):
         if not isinstance(b, SparseBucket):
@@ -319,12 +446,14 @@ class SparseBackend(MttkrpBackend):
     def ykv_bucket(self, b, proj, V):
         if not isinstance(b, SparseBucket):
             return self._inner.ykv_bucket(b, proj, V)
+        _tick("ykv")
         return self._ykv_native(b, proj, V)
 
     def mode1_bucket(self, b, proj, Wb, V=None, *, YkV=None):
         if not isinstance(b, SparseBucket):
             return self._inner.mode1_bucket(b, proj, Wb, V, YkV=YkV)
         if YkV is None:
+            _tick("mode1")
             YkV = self._ykv_native(b, proj, V)
         # YkV in hand, the remaining Hadamard + subject reduction is the
         # shared R x R algebra (uniform shard constraints included)
@@ -334,17 +463,119 @@ class SparseBackend(MttkrpBackend):
         if not isinstance(b, SparseBucket):
             return self._inner.mode2_bucket(b, proj, H, Wb)
         from repro.kernels import scoo
+        _tick("mode2")
         Q, Wb, col_mask, smask = map(
             self.shard_subjects, (proj, Wb, b.col_mask, b.subject_mask))
         return self.shard_subjects(scoo.mode2_compact_scoo(
-            b.vals, b.rows, b.lcols, Q, H, Wb, col_mask, smask,
+            self._pc(b.vals), b.rows, b.lcols, Q, H, Wb, col_mask, smask,
             cperm=b.cperm, col_ends=b.col_ends))
 
     def mode3_bucket(self, b, proj, H, V=None, *, YkV=None):
         if not isinstance(b, SparseBucket):
             return self._inner.mode3_bucket(b, proj, H, V, YkV=YkV)
         if YkV is None:
+            _tick("mode3")
             YkV = self._ykv_native(b, proj, V)
+        return self.mode3(None, None, H, b.subject_mask, YkV=YkV)
+
+
+class FusedBackend(MttkrpBackend):
+    """The fused ALS megakernel route (:mod:`repro.kernels.fused`).
+
+    On CC buckets the four per-iteration streaming launches each pull the
+    subject's [I_pad, C_pad] slab through VMEM with double-buffered DMA and
+    write only the small results back; the projected slices are never
+    materialized — ``project_bucket`` carries Q itself, exactly like the
+    SCOO-native route (so the ``als_step`` contract is unchanged). SCOO
+    buckets delegate wholesale to :class:`SparseBackend`; the array-level
+    CC contraction methods (explicit Yc in hand) delegate to ``jnp``.
+
+    Unlike :class:`PallasBackend` there is no f64 demotion: f64 inputs
+    accumulate f64 (``accum_dtype``), which the interpret-mode parity tests
+    rely on. Real TPUs reject f64 Mosaic kernels — ``AutoBackend._fused_ok``
+    gates the automatic route to f32/bf16 there.
+    """
+
+    name = "fused"
+
+    def __init__(self, precision: str = "f32"):
+        super().__init__(precision)
+        self._jnp = JnpBackend(precision)
+        self._sparse = SparseBackend(inner=self._jnp, precision=precision)
+
+    @staticmethod
+    def _interp() -> bool:
+        from repro.kernels import fused
+        return fused._interpret()
+
+    # -- array-level CC contract: delegate to jnp ---------------------------
+    def ykv(self, Yc, Vg):
+        return self._jnp.ykv(Yc, Vg)
+
+    def _mode1(self, Yc, Vg, Wb, subject_mask, *, YkV=None):
+        return self._jnp._mode1(Yc, Vg, Wb, subject_mask, YkV=YkV)
+
+    def _mode2_compact(self, Yc, H, Wb, col_mask, subject_mask):
+        return self._jnp._mode2_compact(Yc, H, Wb, col_mask, subject_mask)
+
+    def _mode3(self, Yc, Vg, H, subject_mask, *, YkV=None):
+        return self._jnp._mode3(Yc, Vg, H, subject_mask, YkV=YkV)
+
+    # -- bucket-level stages: the four fused launches -----------------------
+    def procrustes_b_bucket(self, b, H, Wb, V, Vg=None):
+        if isinstance(b, SparseBucket):
+            return self._sparse.procrustes_b_bucket(b, H, Wb, V, Vg)
+        from repro.kernels import fused
+        _tick("procrustes_b")
+        Vg = b.gather_v(V) if Vg is None else Vg
+        XkV, B = fused.fused_procrustes_b(
+            self._pc(b.vals), self._pc(Vg), Wb, H, interpret=self._interp())
+        return self.shard_subjects(XkV), self.shard_subjects(B)
+
+    def project_bucket(self, b, Q):
+        if isinstance(b, SparseBucket):
+            return self._sparse.project_bucket(b, Q)
+        return self.shard_subjects(Q)   # carry Q; Yc is never built
+
+    def mode1_xkv_bucket(self, b, Q, XkV, Wb):
+        from repro.kernels import fused
+        _tick("mode1")
+        Wb = fold_subject_mask(Wb, b.subject_mask)
+        return fused.fused_mode1_xkv(Q, XkV, Wb, interpret=self._interp())
+
+    def ykv_bucket(self, b, proj, V):
+        if isinstance(b, SparseBucket):
+            return self._sparse.ykv_bucket(b, proj, V)
+        from repro.kernels import fused
+        _tick("ykv")
+        return self.shard_subjects(fused.fused_ykv(
+            self._pc(b.vals), proj, self._pc(b.gather_v(V)),
+            interpret=self._interp()))
+
+    def mode1_bucket(self, b, proj, Wb, V=None, *, YkV=None):
+        if isinstance(b, SparseBucket):
+            return self._sparse.mode1_bucket(b, proj, Wb, V, YkV=YkV)
+        if YkV is None:
+            YkV = self.ykv_bucket(b, proj, V)
+        return self.mode1(None, None, Wb, b.subject_mask, YkV=YkV)
+
+    def mode2_bucket(self, b, proj, H, Wb):
+        if isinstance(b, SparseBucket):
+            return self._sparse.mode2_bucket(b, proj, H, Wb)
+        from repro.kernels import fused
+        _tick("mode2")
+        Q, Wb_m, cm = map(self.shard_subjects,
+                          (proj, fold_subject_mask(Wb, b.subject_mask),
+                           b.col_mask))
+        return self.shard_subjects(fused.fused_mode2_compact(
+            self._pc(b.vals), Q, H, Wb_m, cm, interpret=self._interp()))
+
+    def mode3_bucket(self, b, proj, H, V=None, *, YkV=None):
+        if isinstance(b, SparseBucket):
+            return self._sparse.mode3_bucket(b, proj, H, V, YkV=YkV)
+        if YkV is None:
+            YkV = self.ykv_bucket(b, proj, V)
+        # YkV in hand, mode-3 is the shared [R,R] coldot — no slab pass left
         return self.mode3(None, None, H, b.subject_mask, YkV=YkV)
 
 
@@ -362,40 +593,76 @@ class AutoBackend(MttkrpBackend):
 
     name = "auto"
 
-    def __init__(self):
-        self._jnp = JnpBackend()
-        self._pallas = PallasBackend()
-        self._sparse = SparseBackend(inner=self._jnp)
+    def __init__(self, precision: str = "f32"):
+        super().__init__(precision)
+        self._jnp = JnpBackend(precision)
+        self._pallas = PallasBackend(precision)
+        self._sparse = SparseBackend(inner=self._jnp, precision=precision)
+        self._fused = FusedBackend(precision)
 
-    # -- bucket-level: SCOO buckets -> the native sparse route --------------
+    def _fused_ok(self, b, R: int) -> bool:
+        """Route a CC bucket through the fused megakernel stages: TPU,
+        f32/bf16 (Mosaic rejects f64), and MXU-quantized geometry. The
+        predicate is a function of static bucket shape/dtype and R only, so
+        every stage of an iteration makes the SAME call — the projected
+        representation (Q on the fused route, Yc on the staged one) must
+        stay coherent across ``project_bucket`` and its consumers."""
+        return (not isinstance(b, SparseBucket)
+                and jax.default_backend() == "tpu"
+                and b.vals.dtype != jnp.float64
+                and R % 8 == 0 and b.c_pad % 128 == 0)
+
+    # -- bucket-level: SCOO -> native sparse; friendly CC on TPU -> fused ---
     def xkv_bucket(self, b, V, Vg=None):
         if isinstance(b, SparseBucket):
             return self._sparse.xkv_bucket(b, V, Vg)
         return super().xkv_bucket(b, V, Vg)
 
+    def procrustes_b_bucket(self, b, H, Wb, V, Vg=None):
+        if isinstance(b, SparseBucket):
+            return self._sparse.procrustes_b_bucket(b, H, Wb, V, Vg)
+        if self._fused_ok(b, H.shape[0]):
+            return self._fused.procrustes_b_bucket(b, H, Wb, V, Vg)
+        return super().procrustes_b_bucket(b, H, Wb, V, Vg)
+
+    def mode1_xkv_bucket(self, b, Q, XkV, Wb):
+        if not isinstance(b, SparseBucket) and self._fused_ok(b, Q.shape[-1]):
+            return self._fused.mode1_xkv_bucket(b, Q, XkV, Wb)
+        return super().mode1_xkv_bucket(b, Q, XkV, Wb)
+
     def project_bucket(self, b, Q):
         if isinstance(b, SparseBucket):
             return self._sparse.project_bucket(b, Q)
+        if self._fused_ok(b, Q.shape[-1]):
+            return self._fused.project_bucket(b, Q)
         return super().project_bucket(b, Q)
 
     def ykv_bucket(self, b, proj, V):
         if isinstance(b, SparseBucket):
             return self._sparse.ykv_bucket(b, proj, V)
+        if self._fused_ok(b, V.shape[-1]):
+            return self._fused.ykv_bucket(b, proj, V)
         return super().ykv_bucket(b, proj, V)
 
     def mode1_bucket(self, b, proj, Wb, V=None, *, YkV=None):
         if isinstance(b, SparseBucket):
             return self._sparse.mode1_bucket(b, proj, Wb, V, YkV=YkV)
+        if self._fused_ok(b, Wb.shape[-1]):
+            return self._fused.mode1_bucket(b, proj, Wb, V, YkV=YkV)
         return super().mode1_bucket(b, proj, Wb, V, YkV=YkV)
 
     def mode2_bucket(self, b, proj, H, Wb):
         if isinstance(b, SparseBucket):
             return self._sparse.mode2_bucket(b, proj, H, Wb)
+        if self._fused_ok(b, H.shape[0]):
+            return self._fused.mode2_bucket(b, proj, H, Wb)
         return super().mode2_bucket(b, proj, H, Wb)
 
     def mode3_bucket(self, b, proj, H, V=None, *, YkV=None):
         if isinstance(b, SparseBucket):
             return self._sparse.mode3_bucket(b, proj, H, V, YkV=YkV)
+        if self._fused_ok(b, H.shape[0]):
+            return self._fused.mode3_bucket(b, proj, H, V, YkV=YkV)
         return super().mode3_bucket(b, proj, H, V, YkV=YkV)
 
     @staticmethod
@@ -444,17 +711,28 @@ class AutoBackend(MttkrpBackend):
 
 
 BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend(),
-            "scoo": SparseBackend(), "auto": AutoBackend()}
+            "scoo": SparseBackend(), "fused": FusedBackend(),
+            "auto": AutoBackend()}
+
+# configured (non-f32 precision) instances, cached per (name, precision) so
+# repeated get_backend calls hand jit the SAME backend object (stable tracing)
+_CONFIGURED: Dict[Tuple[str, str], MttkrpBackend] = {}
 
 
-def get_backend(name) -> MttkrpBackend:
-    """Resolve a backend by name ("jnp" | "pallas" | "scoo" | "auto") or pass
-    an :class:`MttkrpBackend` instance through unchanged."""
+def get_backend(name, precision: Optional[str] = None) -> MttkrpBackend:
+    """Resolve a backend by name ("jnp" | "pallas" | "scoo" | "fused" |
+    "auto") or pass an :class:`MttkrpBackend` instance through unchanged.
+    ``precision`` (None/"f32" default) returns a configured instance that
+    stages streamed operands at that compute precision (see the class docs);
+    the f32 singletons in ``BACKENDS`` are untouched."""
     if isinstance(name, MttkrpBackend):
         return name
-    try:
-        return BACKENDS[name]
-    except KeyError:
+    if name not in BACKENDS:
         raise ValueError(
-            f"unknown MTTKRP backend {name!r}; choose from {sorted(BACKENDS)}"
-        ) from None
+            f"unknown MTTKRP backend {name!r}; choose from {sorted(BACKENDS)}")
+    if precision is None or precision == "f32":
+        return BACKENDS[name]
+    key = (name, precision)
+    if key not in _CONFIGURED:
+        _CONFIGURED[key] = type(BACKENDS[name])(precision=precision)
+    return _CONFIGURED[key]

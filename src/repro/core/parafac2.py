@@ -86,9 +86,18 @@ class Parafac2Options:
     # MTTKRP compute backend: "jnp" (pure-jnp spartan math, exact reference),
     # "pallas" (TPU kernels; interpret-mode emulation off-TPU), "scoo" (the
     # O(nnz) SCOO-native route on SparseBucket data, jnp on CC buckets), or
-    # "auto" (scoo for SCOO buckets; pallas on TPU for kernel-friendly CC
-    # bucket geometry, jnp otherwise). See repro.core.backend.
+    # "pallas" (TPU kernels; interpret-mode emulation off-TPU), "scoo" (the
+    # O(nnz) SCOO-native route on SparseBucket data, jnp on CC buckets),
+    # "fused" (the fused ALS megakernel stages — four double-buffered slab
+    # passes per bucket per iteration, Y_k never materialized), or "auto"
+    # (scoo for SCOO buckets; fused on TPU for kernel-friendly CC bucket
+    # geometry, jnp otherwise). See repro.core.backend.
     backend: str = "auto"
+    # Compute precision for the streamed operands: "f32" (default — bitwise
+    # the historical behaviour), "bf16" or "f16" (slab values staged
+    # half-width, every dot still accumulates f32 via accum_dtype; pairs
+    # with dtype=f32 factors). See repro.kernels.common.
+    precision: str = "f32"
     # W layout: "global" [K,R] (simple, interpretable) or "bucketed" (tuple of
     # per-bucket [Kb,R] rows aligned with the data shards — no W gathers under
     # pjit; the layout production runs use, §Perf 'bucketed W').
@@ -122,6 +131,16 @@ class Parafac2Options:
         # fail fast on a bad preprocessing spec (ValueError listing the
         # registered preprocessors), exactly like constraint specs do
         _compress.parse_preprocess_spec(self.compress)
+        from repro.kernels.common import PRECISIONS
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; "
+                f"choose from {PRECISIONS}")
+        if self.precision != "f32" and jnp.dtype(self.dtype) == jnp.float64:
+            raise ValueError(
+                "precision='bf16'/'f16' casts the streamed operands below "
+                "the requested f64 factor dtype; use dtype=float32 with "
+                "reduced precision, or precision='f32' with f64")
 
     def constraint_specs(self) -> Dict[str, str]:
         """Resolved per-mode constraint specs (``constraints=None`` keeps the
@@ -208,15 +227,16 @@ def _procrustes_project(
 
     ``proj`` is the backend's per-bucket projected representation
     (:meth:`MttkrpBackend.project_bucket`): the compact Yc [Kb, R, C] on the
-    dense route, Q itself on the SCOO-native route (where Y_k is never
-    materialized). ``als_step`` only ever hands it back to the same backend.
+    dense route, Q itself on the SCOO-native and fused routes (where Y_k is
+    never materialized). ``als_step`` only ever hands it back to the same
+    backend.
     """
-    be = get_backend(opts.backend) if be is None else be
+    be = get_backend(opts.backend, opts.precision) if be is None else be
     Vg = b.gather_v(V)                                   # [Kb, C, R]
-    XkV = be.xkv_bucket(b, V, Vg)                        # [Kb, I, R]
     Wb = _w_rows(W, b, i)                                # [Kb, R]
-    # B_k = X_k V S_k H^T  == (XkV * w_k) @ H^T
-    B = jnp.einsum("kir,lr->kil", XkV * Wb[:, None, :], H)
+    # B_k = X_k V S_k H^T  == (XkV * w_k) @ H^T — one fused slab pass on the
+    # fused route, xkv + a small einsum on the staged ones
+    XkV, B = be.procrustes_b_bucket(b, H, Wb, V, Vg)     # [Kb, I, R] x2
     Q = solve_q(B, opts.procrustes)                      # [Kb, I, R]
     Q = be.shard_subjects(Q * b.subject_mask[:, None, None])
     proj = be.project_bucket(b, Q)
@@ -236,7 +256,7 @@ def als_step(
     """
     H, V, W = state.H, state.V, state.W
     R, J, K = opts.rank, data.n_cols, data.n_subjects
-    be = get_backend(opts.backend)
+    be = get_backend(opts.backend, opts.precision)
     cons = constraints_for(opts)
     solve_kw = dict(nnls_sweeps=opts.nnls_sweeps, admm_iters=opts.admm_iters)
     aux = state.aux if isinstance(state.aux, dict) else cst.empty_aux()
@@ -257,9 +277,9 @@ def als_step(
     for i, (b, (proj, XkV, Q)) in enumerate(zip(data.buckets, per_bucket)):
         Wb = _w_rows(W, b, i)
         if opts.mode1_reuse:
-            # Y_k V = Q_k^T (X_k V): skip the gather+matmul on sparse data.
-            YkV = jnp.einsum("kir,kil->krl", Q, XkV)
-            M1 = M1 + be.mode1_bucket(b, proj, Wb, YkV=YkV)
+            # Y_k V = Q_k^T (X_k V): skip the gather+matmul on sparse data
+            # (fused backends reduce M1 in the same dispatch that forms YkV)
+            M1 = M1 + be.mode1_xkv_bucket(b, Q, XkV, Wb)
         else:
             M1 = M1 + be.mode1_bucket(b, proj, Wb, V)
     M1 = psum_subjects(M1)
@@ -431,7 +451,7 @@ def update_subjects(
     if inner_iters < 1:
         raise ValueError(f"inner_iters must be >= 1, got {inner_iters}")
     R = opts.rank
-    be = get_backend(opts.backend)
+    be = get_backend(opts.backend, opts.precision)
     cons_w = constraints_for(opts)["w"]
     solve_kw = dict(nnls_sweeps=opts.nnls_sweeps, admm_iters=opts.admm_iters)
     VtV = V.T @ V

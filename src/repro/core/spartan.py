@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.common import accum_dtype
+
 __all__ = [
     "mode1_bucket",
     "mode2_bucket_compact",
@@ -35,12 +37,11 @@ __all__ = [
 
 
 def _f(x):
-    """Promote to at least f32 for accumulation: bf16/f16 slice values feed
-    subject-axis reductions, which lose mass in half precision. f32/f64 pass
-    through unchanged (the f64 algebra tests must stay exact)."""
-    if jnp.issubdtype(x.dtype, jnp.floating) and jnp.finfo(x.dtype).bits < 32:
-        return x.astype(jnp.float32)
-    return x
+    """Promote to the shared accumulation dtype (``kernels.common.accum_dtype``):
+    bf16/f16 slice values feed subject-axis reductions, which lose mass in half
+    precision, so they widen to f32. f32/f64 pass through unchanged (the f64
+    algebra tests must stay exact)."""
+    return x.astype(accum_dtype(x))
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,55 @@
 """Small helpers shared by the MTTKRP kernel wrappers."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
+import jax.numpy as jnp
 
-__all__ = ["fold_subject_mask"]
+__all__ = ["fold_subject_mask", "accum_dtype", "compute_cast", "PRECISIONS"]
+
+# compute-precision knob values (Parafac2Options.precision / --precision):
+# "f32" streams operands as-is; "bf16"/"f16" stage the streamed values
+# half-width (the MXU's full-rate input format) while every contraction
+# still accumulates through accum_dtype below.
+PRECISIONS = ("f32", "bf16", "f16")
+
+
+def accum_dtype(x: Union[jax.Array, jnp.dtype, type, None]) -> jnp.dtype:
+    """Accumulation dtype for a contraction over ``x``: f64 in -> f64 accum
+    (the exact-algebra tests rely on it), bf16/f16 in -> f32 accum
+    (half-precision partial sums lose mass over the subject/column axes),
+    f32 and non-floats pass through. Accepts an array or a dtype.
+
+    This is the single policy behind every ``preferred_element_type`` in the
+    kernels and their jnp oracles — hardcoding ``jnp.float32`` there silently
+    downgraded f64 runs to f32 accumulation.
+    """
+    dt = jnp.dtype(getattr(x, "dtype", x))
+    if not jnp.issubdtype(dt, jnp.floating):
+        return dt
+    if jnp.finfo(dt).bits < 32:
+        return jnp.dtype(jnp.float32)
+    return dt
+
+
+def compute_cast(x: Optional[jax.Array], precision: str = "f32") -> Optional[jax.Array]:
+    """Stage a streamed operand at the requested compute precision.
+
+    ``"f32"`` passes through unchanged (whatever dtype the caller staged —
+    including f64). ``"bf16"`` / ``"f16"`` cast floating inputs half-width so
+    the MXU runs at full rate; pair with ``accum_dtype`` so the products
+    still accumulate in f32. None and non-float arrays pass through.
+    """
+    if x is None or precision == "f32" or precision is None:
+        return x
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown compute precision {precision!r}; choose from {PRECISIONS}")
+    dt = jnp.bfloat16 if precision == "bf16" else jnp.float16
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return x.astype(dt)
+    return x
 
 
 def fold_subject_mask(Wb: jax.Array, subject_mask: Optional[jax.Array]) -> jax.Array:

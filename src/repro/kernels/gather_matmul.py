@@ -21,10 +21,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import accum_dtype
+
 __all__ = ["gather_matmul_pallas"]
 
 
-def _kernel(blk_ref, vals_ref, v_ref, out_ref, *, nb: int):
+def _kernel(blk_ref, vals_ref, v_ref, out_ref, *, nb: int, acc):
     b = pl.program_id(1)
 
     @pl.when(b == 0)
@@ -33,7 +35,7 @@ def _kernel(blk_ref, vals_ref, v_ref, out_ref, *, nb: int):
 
     # vals block [1, I, 1, L] @ gathered V block [L, R]
     x = vals_ref[0, :, 0, :]                      # [I, L]
-    out_ref[0] += jnp.dot(x, v_ref[...], preferred_element_type=jnp.float32)
+    out_ref[0] += jnp.dot(x, v_ref[...], preferred_element_type=acc)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -46,6 +48,7 @@ def gather_matmul_pallas(
 ) -> jax.Array:
     K, I, NB, L = vals.shape
     J_pad, R = V.shape
+    acc = accum_dtype(vals)
     if J_pad % L:
         raise ValueError(f"V rows ({J_pad}) must be a multiple of the lane width {L}")
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -59,8 +62,8 @@ def gather_matmul_pallas(
         out_specs=pl.BlockSpec((1, I, R), lambda k, b, blk: (k, 0, 0)),
     )
     return pl.pallas_call(
-        functools.partial(_kernel, nb=NB),
+        functools.partial(_kernel, nb=NB, acc=acc),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((K, I, R), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((K, I, R), acc),
         interpret=interpret,
     )(blk_ids, vals, V)

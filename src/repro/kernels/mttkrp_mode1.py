@@ -28,12 +28,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import fold_subject_mask
+from repro.kernels.common import accum_dtype, fold_subject_mask
 
 __all__ = ["mode1_pallas", "mode1_reuse_pallas"]
 
 
-def _kernel(yc_ref, vg_ref, wb_ref, out_ref):
+def _kernel(yc_ref, vg_ref, wb_ref, out_ref, *, acc):
     k = pl.program_id(0)
     c = pl.program_id(1)
 
@@ -41,8 +41,8 @@ def _kernel(yc_ref, vg_ref, wb_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    yv = jnp.dot(yc_ref[0], vg_ref[0], preferred_element_type=jnp.float32)  # [R, R]
-    out_ref[...] += yv * wb_ref[0][None, :]
+    yv = jnp.dot(yc_ref[0], vg_ref[0], preferred_element_type=acc)  # [R, R]
+    out_ref[...] += yv * wb_ref[0].astype(acc)[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
@@ -58,8 +58,9 @@ def mode1_pallas(
     """Yc [K,R,C], Vg [K,C,R], Wb [K,R] -> [R,R]. ``subject_mask`` [K] (1.0 =
     real subject) is folded into Wb so padded subjects contribute nothing."""
     K, R, C = Yc.shape
+    acc = accum_dtype(Yc)
     if K == 0:
-        return jnp.zeros((R, R), jnp.float32)
+        return jnp.zeros((R, R), acc)
     Wb = fold_subject_mask(Wb, subject_mask)
     bc = min(block_c, C)
     nc = pl.cdiv(C, bc)
@@ -69,7 +70,7 @@ def mode1_pallas(
         Vg = jnp.pad(Vg, ((0, 0), (0, pad), (0, 0)))
     grid = (K, nc)
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, acc=acc),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, R, bc), lambda k, c: (k, 0, c)),
@@ -77,20 +78,20 @@ def mode1_pallas(
             pl.BlockSpec((1, R), lambda k, c: (k, 0)),
         ],
         out_specs=pl.BlockSpec((R, R), lambda k, c: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, R), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((R, R), acc),
         interpret=interpret,
     )(Yc, Vg, Wb)
 
 
-def _reuse_kernel(ykv_ref, wb_ref, out_ref):
+def _reuse_kernel(ykv_ref, wb_ref, out_ref, *, acc):
     k = pl.program_id(0)
 
     @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    ykv = ykv_ref[0].astype(jnp.float32)
-    out_ref[...] += ykv * wb_ref[0].astype(jnp.float32)[None, :]
+    ykv = ykv_ref[0].astype(acc)
+    out_ref[...] += ykv * wb_ref[0].astype(acc)[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -104,17 +105,18 @@ def mode1_reuse_pallas(
     """YkV [K,R,R] (= Y_k V, cached), Wb [K,R] -> [R,R]: Hadamard with W(k,:)
     plus the subject-axis reduction only — the matmul was paid upstream."""
     K, R, _ = YkV.shape
+    acc = accum_dtype(YkV)
     if K == 0:
-        return jnp.zeros((R, R), jnp.float32)
+        return jnp.zeros((R, R), acc)
     Wb = fold_subject_mask(Wb, subject_mask)
     return pl.pallas_call(
-        _reuse_kernel,
+        functools.partial(_reuse_kernel, acc=acc),
         grid=(K,),
         in_specs=[
             pl.BlockSpec((1, R, R), lambda k: (k, 0, 0)),
             pl.BlockSpec((1, R), lambda k: (k, 0)),
         ],
         out_specs=pl.BlockSpec((R, R), lambda k: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, R), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((R, R), acc),
         interpret=interpret,
     )(YkV, Wb)

@@ -20,15 +20,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import fold_subject_mask
+from repro.kernels.common import accum_dtype, fold_subject_mask
 
 __all__ = ["mode2_compact_pallas"]
 
 
-def _kernel(yc_ref, h_ref, wb_ref, cm_ref, out_ref):
+def _kernel(yc_ref, h_ref, wb_ref, cm_ref, out_ref, *, acc):
     # yc [1, R, bc]; h [R, R]; wb [1, R]; cm [1, bc]; out [1, bc, R]
-    ytH = jnp.dot(yc_ref[0].T, h_ref[...], preferred_element_type=jnp.float32)
-    out_ref[0] = ytH * wb_ref[0][None, :] * cm_ref[0].astype(jnp.float32)[:, None]
+    ytH = jnp.dot(yc_ref[0].T, h_ref[...], preferred_element_type=acc)
+    out_ref[0] = ytH * wb_ref[0].astype(acc)[None, :] * cm_ref[0].astype(acc)[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
@@ -45,8 +45,9 @@ def mode2_compact_pallas(
     """Yc [K,R,C], H [R,R], Wb [K,R] -> A [K,C,R]. Optional ``col_mask``
     [K,C] / ``subject_mask`` [K] zero padded columns / subjects."""
     K, R, C = Yc.shape
+    acc = accum_dtype(Yc)
     if K == 0:
-        return jnp.zeros((K, C, R), jnp.float32)
+        return jnp.zeros((K, C, R), acc)
     Wb = fold_subject_mask(Wb, subject_mask)
     if col_mask is None:
         col_mask = jnp.ones((K, C), jnp.float32)
@@ -58,7 +59,7 @@ def mode2_compact_pallas(
         col_mask = jnp.pad(col_mask, ((0, 0), (0, C_pad - C)))
     grid = (K, nc)
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, acc=acc),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, R, bc), lambda k, c: (k, 0, c)),
@@ -67,7 +68,7 @@ def mode2_compact_pallas(
             pl.BlockSpec((1, bc), lambda k, c: (k, c)),
         ],
         out_specs=pl.BlockSpec((1, bc, R), lambda k, c: (k, c, 0)),
-        out_shape=jax.ShapeDtypeStruct((K, C_pad, R), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((K, C_pad, R), acc),
         interpret=interpret,
     )(Yc, H, Wb, col_mask)
     return out[:, :C, :]

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import accum_dtype
+
 __all__ = ["mode3_pallas", "mode3_reuse_pallas"]
 
 
@@ -29,18 +31,18 @@ def _mask_rows(out: jax.Array, subject_mask: Optional[jax.Array]) -> jax.Array:
     return out * subject_mask[:, None].astype(out.dtype)
 
 
-def _kernel(yc_ref, vg_ref, h_ref, out_ref, acc_ref, *, nc: int):
+def _kernel(yc_ref, vg_ref, h_ref, out_ref, acc_ref, *, nc: int, acc):
     c = pl.program_id(1)
 
     @pl.when(c == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(yc_ref[0], vg_ref[0], preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(yc_ref[0], vg_ref[0], preferred_element_type=acc)
 
     @pl.when(c == nc - 1)
     def _fin():
-        out_ref[0] = jnp.sum(h_ref[...] * acc_ref[...], axis=0)  # coldot
+        out_ref[0] = jnp.sum(h_ref[...].astype(acc) * acc_ref[...], axis=0)  # coldot
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
@@ -56,8 +58,9 @@ def mode3_pallas(
     """Yc [K,R,C], Vg [K,C,R], H [R,R] -> [K,R]. ``subject_mask`` [K] zeroes
     rows of padded subjects."""
     K, R, C = Yc.shape
+    acc = accum_dtype(Yc)
     if K == 0:
-        return jnp.zeros((K, R), jnp.float32)
+        return jnp.zeros((K, R), acc)
     bc = min(block_c, C)
     nc = pl.cdiv(C, bc)
     if C % bc:  # zero-pad partial tile
@@ -66,7 +69,7 @@ def mode3_pallas(
         Vg = jnp.pad(Vg, ((0, 0), (0, pad), (0, 0)))
     grid = (K, nc)
     out = pl.pallas_call(
-        functools.partial(_kernel, nc=nc),
+        functools.partial(_kernel, nc=nc, acc=acc),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, R, bc), lambda k, c: (k, 0, c)),
@@ -74,16 +77,16 @@ def mode3_pallas(
             pl.BlockSpec((R, R), lambda k, c: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, R), lambda k, c: (k, 0)),
-        out_shape=jax.ShapeDtypeStruct((K, R), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((R, R), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((K, R), acc),
+        scratch_shapes=[pltpu.VMEM((R, R), acc)],
         interpret=interpret,
     )(Yc, Vg, H)
     return _mask_rows(out, subject_mask)
 
 
-def _reuse_kernel(ykv_ref, h_ref, out_ref):
-    ykv = ykv_ref[0].astype(jnp.float32)
-    out_ref[0] = jnp.sum(h_ref[...].astype(jnp.float32) * ykv, axis=0)
+def _reuse_kernel(ykv_ref, h_ref, out_ref, *, acc):
+    ykv = ykv_ref[0].astype(acc)
+    out_ref[0] = jnp.sum(h_ref[...].astype(acc) * ykv, axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -97,17 +100,18 @@ def mode3_reuse_pallas(
     """YkV [K,R,R] (= Y_k V, cached), H [R,R] -> [K,R]: per-subject coldot
     only — the matmul was paid upstream."""
     K, R, _ = YkV.shape
+    acc = accum_dtype(YkV)
     if K == 0:
-        return jnp.zeros((K, R), jnp.float32)
+        return jnp.zeros((K, R), acc)
     out = pl.pallas_call(
-        _reuse_kernel,
+        functools.partial(_reuse_kernel, acc=acc),
         grid=(K,),
         in_specs=[
             pl.BlockSpec((1, R, R), lambda k: (k, 0, 0)),
             pl.BlockSpec((R, R), lambda k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, R), lambda k: (k, 0)),
-        out_shape=jax.ShapeDtypeStruct((K, R), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((K, R), acc),
         interpret=interpret,
     )(YkV, H)
     return _mask_rows(out, subject_mask)

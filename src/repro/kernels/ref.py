@@ -2,11 +2,17 @@
 
 Each function mirrors one kernel's exact interface; kernel tests sweep shapes
 and dtypes and assert_allclose against these.
+
+Accumulation follows :func:`repro.kernels.common.accum_dtype`: f64 inputs
+accumulate (and return) f64, sub-f32 inputs accumulate f32 — the oracles must
+not silently downgrade the f64 algebra the exactness tests rely on.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.common import accum_dtype
 
 __all__ = [
     "ykv_ref",
@@ -26,35 +32,41 @@ def mode1_ref(Yc: jax.Array, Vg: jax.Array, Wb: jax.Array) -> jax.Array:
     Padded subjects must arrive zeroed (mask pre-applied), as the kernel
     accumulates unconditionally.
     """
-    YkV = jnp.einsum("krc,kcl->krl", Yc, Vg, preferred_element_type=jnp.float32)
-    return jnp.einsum("krl,kl->rl", YkV, Wb.astype(jnp.float32))
+    acc = accum_dtype(Yc)
+    YkV = jnp.einsum("krc,kcl->krl", Yc, Vg, preferred_element_type=acc)
+    return jnp.einsum("krl,kl->rl", YkV, Wb.astype(acc))
 
 
 def ykv_ref(Yc: jax.Array, Vg: jax.Array) -> jax.Array:
     """YkV[k] = Y_k V  ->  [K, R, R] (the shared reuse product)."""
-    return jnp.einsum("krc,kcl->krl", Yc, Vg, preferred_element_type=jnp.float32)
+    return jnp.einsum("krc,kcl->krl", Yc, Vg,
+                      preferred_element_type=accum_dtype(Yc))
 
 
 def mode1_reuse_ref(YkV: jax.Array, Wb: jax.Array) -> jax.Array:
     """sum_k YkV_k * W(k,:) with YkV [K, R, R] pre-computed -> [R, R]."""
-    return jnp.einsum("krl,kl->rl", YkV.astype(jnp.float32), Wb.astype(jnp.float32))
+    acc = accum_dtype(YkV)
+    return jnp.einsum("krl,kl->rl", YkV.astype(acc), Wb.astype(acc))
 
 
 def mode2_compact_ref(Yc: jax.Array, H: jax.Array, Wb: jax.Array) -> jax.Array:
     """A[k] = (Y_k^T H) * W(k,:)  ->  [K, C, R] (compact mode-2 stage)."""
-    A = jnp.einsum("krc,rl->kcl", Yc, H, preferred_element_type=jnp.float32)
-    return A * Wb[:, None, :].astype(jnp.float32)
+    acc = accum_dtype(Yc)
+    A = jnp.einsum("krc,rl->kcl", Yc, H, preferred_element_type=acc)
+    return A * Wb[:, None, :].astype(acc)
 
 
 def mode3_ref(Yc: jax.Array, Vg: jax.Array, H: jax.Array) -> jax.Array:
     """M3 rows: out[k,:] = coldot(H, Y_k V)  ->  [K, R]."""
-    YkV = jnp.einsum("krc,kcl->krl", Yc, Vg, preferred_element_type=jnp.float32)
-    return jnp.einsum("rl,krl->kl", H.astype(jnp.float32), YkV)
+    acc = accum_dtype(Yc)
+    YkV = jnp.einsum("krc,kcl->krl", Yc, Vg, preferred_element_type=acc)
+    return jnp.einsum("rl,krl->kl", H.astype(acc), YkV)
 
 
 def mode3_reuse_ref(YkV: jax.Array, H: jax.Array) -> jax.Array:
     """out[k,:] = coldot(H, YkV_k) with YkV [K, R, R] pre-computed -> [K, R]."""
-    return jnp.einsum("rl,krl->kl", H.astype(jnp.float32), YkV.astype(jnp.float32))
+    acc = accum_dtype(YkV)
+    return jnp.einsum("rl,krl->kl", H.astype(acc), YkV.astype(acc))
 
 
 def gather_matmul_ref(vals: jax.Array, blk_ids: jax.Array, V: jax.Array) -> jax.Array:
@@ -65,4 +77,5 @@ def gather_matmul_ref(vals: jax.Array, blk_ids: jax.Array, V: jax.Array) -> jax.
     R = V.shape[1]
     V_blocks = V.reshape(-1, L, R)                       # [J_pad/L, L, R]
     Vg = V_blocks[blk_ids]                               # [K, NB, L, R]
-    return jnp.einsum("kinl,knlr->kir", vals, Vg, preferred_element_type=jnp.float32)
+    return jnp.einsum("kinl,knlr->kir", vals, Vg,
+                      preferred_element_type=accum_dtype(vals))

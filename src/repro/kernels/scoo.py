@@ -56,11 +56,7 @@ __all__ = [
 ]
 
 
-def _acc(dtype):
-    """Accumulation dtype: at least f32 (f64 passes through)."""
-    if jnp.issubdtype(dtype, jnp.floating) and jnp.finfo(dtype).bits < 32:
-        return jnp.float32
-    return dtype
+from repro.kernels.common import accum_dtype as _acc  # shared accumulation policy
 
 
 def _interpret() -> bool:
@@ -223,7 +219,7 @@ def _block_skip_counts(nnz_counts, vals) -> jax.Array:
 
 
 def _xkv_kernel(nnz_ref, vals_ref, rows_ref, lcols_ref, vg_ref, out_ref,
-                *, block_n: int):
+                *, block_n: int, acc):
     k, b = pl.program_id(0), pl.program_id(1)
 
     @pl.when(b == 0)
@@ -232,7 +228,7 @@ def _xkv_kernel(nnz_ref, vals_ref, rows_ref, lcols_ref, vg_ref, out_ref,
 
     @pl.when(b * block_n < nnz_ref[k])
     def _accum():
-        vals = vals_ref[0].astype(jnp.float32)            # [BN]
+        vals = vals_ref[0].astype(acc)                    # [BN]
         lc = lcols_ref[0]                                 # [BN] i32
         r = rows_ref[0]                                   # [BN] i32
         C = vg_ref.shape[1]
@@ -240,13 +236,13 @@ def _xkv_kernel(nnz_ref, vals_ref, rows_ref, lcols_ref, vg_ref, out_ref,
         BN = vals.shape[0]
         onehot_c = (lc[:, None] ==
                     lax.broadcasted_iota(jnp.int32, (BN, C), 1))
-        g = jnp.dot(onehot_c.astype(jnp.float32), vg_ref[0].astype(jnp.float32),
-                    preferred_element_type=jnp.float32)   # [BN, R]
+        g = jnp.dot(onehot_c.astype(acc), vg_ref[0].astype(acc),
+                    preferred_element_type=acc)           # [BN, R]
         contrib = g * vals[:, None]
         onehot_r = (r[:, None] ==
                     lax.broadcasted_iota(jnp.int32, (BN, I), 1))
-        out_ref[0] += jnp.dot(onehot_r.astype(jnp.float32).T, contrib,
-                              preferred_element_type=jnp.float32)
+        out_ref[0] += jnp.dot(onehot_r.astype(acc).T, contrib,
+                              preferred_element_type=acc)
 
 
 @functools.partial(jax.jit, static_argnames=("i_pad", "block_n", "interpret"))
@@ -255,8 +251,9 @@ def xk_times_v_pallas(vals, rows, lcols, Vg, i_pad: int, *, nnz_counts=None,
     """Pallas X_k V: [Kb,N] triplets + Vg [Kb,C,R] -> [Kb, I_pad, R] (f32)."""
     Kb, N = vals.shape
     R = Vg.shape[-1]
+    acc = _acc(vals)
     if Kb == 0:
-        return jnp.zeros((Kb, i_pad, R), jnp.float32)
+        return jnp.zeros((Kb, i_pad, R), acc)
     nnz = _block_skip_counts(nnz_counts, vals)
     bn = min(block_n, N)
     nb = pl.cdiv(N, bn)
@@ -277,15 +274,15 @@ def xk_times_v_pallas(vals, rows, lcols, Vg, i_pad: int, *, nnz_counts=None,
         out_specs=pl.BlockSpec((1, i_pad, R), lambda k, b, nnz: (k, 0, 0)),
     )
     return pl.pallas_call(
-        functools.partial(_xkv_kernel, block_n=bn),
+        functools.partial(_xkv_kernel, block_n=bn, acc=acc),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Kb, i_pad, R), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Kb, i_pad, R), acc),
         interpret=interpret,
     )(nnz, vals, rows, lcols, Vg)
 
 
 def _project_kernel(nnz_ref, vals_ref, rows_ref, lcols_ref, q_ref, out_ref,
-                    *, block_n: int):
+                    *, block_n: int, acc):
     k, b = pl.program_id(0), pl.program_id(1)
 
     @pl.when(b == 0)
@@ -294,7 +291,7 @@ def _project_kernel(nnz_ref, vals_ref, rows_ref, lcols_ref, q_ref, out_ref,
 
     @pl.when(b * block_n < nnz_ref[k])
     def _accum():
-        vals = vals_ref[0].astype(jnp.float32)            # [BN]
+        vals = vals_ref[0].astype(acc)                    # [BN]
         lc = lcols_ref[0]
         r = rows_ref[0]
         I = q_ref.shape[1]
@@ -302,24 +299,26 @@ def _project_kernel(nnz_ref, vals_ref, rows_ref, lcols_ref, q_ref, out_ref,
         BN = vals.shape[0]
         onehot_r = (r[:, None] ==
                     lax.broadcasted_iota(jnp.int32, (BN, I), 1))
-        qg = jnp.dot(onehot_r.astype(jnp.float32), q_ref[0].astype(jnp.float32),
-                     preferred_element_type=jnp.float32)  # [BN, R]
+        qg = jnp.dot(onehot_r.astype(acc), q_ref[0].astype(acc),
+                     preferred_element_type=acc)          # [BN, R]
         contrib = qg * vals[:, None]                      # [BN, R]
         onehot_c = (lc[:, None] ==
                     lax.broadcasted_iota(jnp.int32, (BN, C), 1))
         # out [R, C] += contrib^T @ onehot_c
-        out_ref[0] += jnp.dot(contrib.T, onehot_c.astype(jnp.float32),
-                              preferred_element_type=jnp.float32)
+        out_ref[0] += jnp.dot(contrib.T, onehot_c.astype(acc),
+                              preferred_element_type=acc)
 
 
 @functools.partial(jax.jit, static_argnames=("c_pad", "block_n", "interpret"))
 def project_pallas(vals, rows, lcols, Q, c_pad: int, *, nnz_counts=None,
                    block_n: int = _BLOCK_N, interpret: bool = False):
-    """Pallas Y_k = Q_k^T X_k: triplets + Q [Kb,I,R] -> [Kb, R, c_pad] (f32)."""
+    """Pallas Y_k = Q_k^T X_k: triplets + Q [Kb,I,R] -> [Kb, R, c_pad],
+    accumulated in the shared accum dtype (f32 for sub-f64 inputs)."""
     Kb, N = vals.shape
     R = Q.shape[-1]
+    acc = _acc(vals)
     if Kb == 0:
-        return jnp.zeros((Kb, R, c_pad), jnp.float32)
+        return jnp.zeros((Kb, R, c_pad), acc)
     nnz = _block_skip_counts(nnz_counts, vals)
     bn = min(block_n, N)
     nb = pl.cdiv(N, bn)
@@ -340,8 +339,8 @@ def project_pallas(vals, rows, lcols, Q, c_pad: int, *, nnz_counts=None,
         out_specs=pl.BlockSpec((1, R, c_pad), lambda k, b, nnz: (k, 0, 0)),
     )
     return pl.pallas_call(
-        functools.partial(_project_kernel, block_n=bn),
+        functools.partial(_project_kernel, block_n=bn, acc=acc),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Kb, R, c_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Kb, R, c_pad), acc),
         interpret=interpret,
     )(nnz, vals, rows, lcols, Q)

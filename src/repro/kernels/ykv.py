@@ -15,17 +15,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import accum_dtype
+
 __all__ = ["ykv_pallas"]
 
 
-def _kernel(yc_ref, vg_ref, out_ref):
+def _kernel(yc_ref, vg_ref, out_ref, *, acc):
     c = pl.program_id(1)
 
     @pl.when(c == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    out_ref[0] += jnp.dot(yc_ref[0], vg_ref[0], preferred_element_type=jnp.float32)
+    out_ref[0] += jnp.dot(yc_ref[0], vg_ref[0], preferred_element_type=acc)
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
@@ -36,10 +38,11 @@ def ykv_pallas(
     block_c: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """Yc [K,R,C], Vg [K,C,R] -> YkV [K,R,R] (f32 accumulation)."""
+    """Yc [K,R,C], Vg [K,C,R] -> YkV [K,R,R] (accum_dtype accumulation)."""
     K, R, C = Yc.shape
+    acc = accum_dtype(Yc)
     if K == 0:
-        return jnp.zeros((K, R, R), jnp.float32)
+        return jnp.zeros((K, R, R), acc)
     bc = min(block_c, C)
     nc = pl.cdiv(C, bc)
     if C % bc:  # zero-pad partial tile (zero columns contribute nothing)
@@ -48,13 +51,13 @@ def ykv_pallas(
         Vg = jnp.pad(Vg, ((0, 0), (0, pad), (0, 0)))
     grid = (K, nc)
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, acc=acc),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, R, bc), lambda k, c: (k, 0, c)),
             pl.BlockSpec((1, bc, R), lambda k, c: (k, c, 0)),
         ],
         out_specs=pl.BlockSpec((1, R, R), lambda k, c: (k, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((K, R, R), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((K, R, R), acc),
         interpret=interpret,
     )(Yc, Vg)

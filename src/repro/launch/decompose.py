@@ -71,9 +71,15 @@ def main(argv=None) -> dict:
                          "oversampling p; q power iterations), runs the core "
                          "ALS, and expands exactly at the end")
     ap.add_argument("--backend", default="auto",
-                    choices=["jnp", "pallas", "scoo", "auto"],
+                    choices=["jnp", "pallas", "scoo", "fused", "auto"],
                     help="MTTKRP compute backend for the ALS hot loop "
-                         "(see repro.core.backend)")
+                         "(see repro.core.backend; 'fused' runs the fused "
+                         "ALS megakernel stages — Y_k never materialized)")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "f16"],
+                    help="compute precision for the streamed operands: "
+                         "bf16/f16 stage slab values half-width while every "
+                         "dot accumulates f32 (repro.kernels.common)")
     ap.add_argument("--format", default="cc", choices=list(FORMATS),
                     help="device data format (repro.core.irregular): cc "
                          "(dense over kept columns), scoo (O(nnz) flat COO), "
@@ -126,6 +132,7 @@ def main(argv=None) -> dict:
 
     # raises ValueError listing the registered preprocessors on a bad spec
     opts = Parafac2Options(rank=args.rank, constraints=specs, backend=args.backend,
+                           precision=args.precision,
                            engine=args.engine, check_every=args.check_every,
                            compress=args.compress)
     t0 = time.perf_counter()
@@ -147,7 +154,8 @@ def main(argv=None) -> dict:
         resolved_options(opts, format=args.format, tol=args.tol,
                          seed=args.seed),
         dataset=args.dataset, scale=args.scale, rank=args.rank,
-        engine=args.engine, backend=args.backend, tol=args.tol,
+        engine=args.engine, backend=args.backend, precision=args.precision,
+        tol=args.tol,
         check_every=args.check_every, seed=args.seed,
         # device-format decisions: requested format + the per-bucket routing
         # (chosen format, density, nnz, padded shape, device bytes)

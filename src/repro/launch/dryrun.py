@@ -356,7 +356,8 @@ PARAFAC2_CELLS = {
 def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
                       backend: str = "jnp", engine: str = "host",
                       check_every: int = 8, constraint: str = "",
-                      format: str = "cc", compress: str = "none"):
+                      format: str = "cc", compress: str = "none",
+                      precision: str = "f32"):
     """Lower + compile one PARAFAC2 cell. ``engine`` selects what one
     dispatch is: a single als_step ("host" — today's per-iteration loop), a
     check_every-iteration lax.scan chunk under GSPMD ("scan"), or the same
@@ -389,13 +390,13 @@ def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
            "shape": "als_step", "mesh": mesh_name,
            "kind": "parafac2", "n_chips": n_chips, "params": 0,
            "active_params": 0, "backend": backend, "engine": engine,
-           "format": format, "compress": pp.spec}
+           "format": format, "compress": pp.spec, "precision": precision}
     specs = (parse_constraint_arg(constraint) if constraint
              else {"v": "nonneg", "w": "nonneg"})
     rec["constraints"] = {m: s for m, s in specs.items()}
     opts = Parafac2Options(rank=R, constraints=specs, w_layout="bucketed",
-                           backend=backend, engine=engine,
-                           check_every=check_every)
+                           backend=backend, precision=precision,
+                           engine=engine, check_every=check_every)
     wide = rec.get("wide", True)
     dp = _axis_size(mesh, tuple(mesh.axis_names) if wide else ("pod", "data"))
     data, state = parafac2_specs(K, J, R, geom, dp, opts, format=format)
@@ -436,6 +437,12 @@ def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
         rec.update(terms)
         rec["t_memory_hlo"] = terms["t_memory"]
         rec["t_memory"] = rec["bytes_per_device"] / hw.hbm_bw
+        # flops per HLO byte accessed — the fused backend's whole point is
+        # raising this (Y_k never round-trips HBM between stages; bf16/f16
+        # precision additionally halves every streamed slab byte)
+        rec["arithmetic_intensity"] = (
+            terms["hlo_flops"] / terms["hlo_bytes"]
+            if terms.get("hlo_bytes") else 0.0)
         dominant = max(("t_compute", "t_memory", "t_collective"),
                        key=lambda k: rec[k])
         rec["bottleneck"] = dominant
@@ -450,6 +457,23 @@ def run_parafac2_cell(name: str, mesh: Mesh, mesh_name: str, hw=TPU_V5E,
         useful = (6.0 * cells * R + 10.0 * K * R * R) / n_chips
         rec["model_flops_per_device"] = useful
         rec["useful_fraction"] = useful / terms["hlo_flops"] if terms["hlo_flops"] else 0.0
+        # model-side streamed-slab traffic per iteration, precision-aware
+        # (bf16/f16 slabs move 2 bytes/cell, f32 moves 4). The staged route
+        # reads the vals slab twice (X_k V, projection) and round-trips the
+        # compact Yc three more times (write + mode-2 + ykv reads); the
+        # fused route re-reads vals three times and never materializes Yc —
+        # the arithmetic-intensity gap the megakernel exists for.
+        if format != "scoo":
+            val_b = 2                       # parafac2_specs lowers bf16 vals
+            slab_b = 2 if precision in ("bf16", "f16") else 4
+            yc_cells = sum(kb * R * cp for kb, ip, cp, npad in geom)
+            if backend == "fused":
+                streamed = 3.0 * cells * val_b
+            else:
+                streamed = 2.0 * cells * val_b + 3.0 * yc_cells * slab_b
+            rec["model_streamed_bytes_per_device"] = streamed / n_chips
+            rec["model_arithmetic_intensity"] = (
+                useful / (streamed / n_chips) if streamed else 0.0)
     return rec
 
 
@@ -480,9 +504,16 @@ def main(argv=None):
     ap.add_argument("--out", default=os.path.normpath(RESULTS_PATH))
     ap.add_argument("--parafac2", action="store_true", help="also run paper-workload cells")
     ap.add_argument("--backend", default="jnp",
-                    choices=["jnp", "pallas", "scoo", "auto"],
+                    choices=["jnp", "pallas", "scoo", "fused", "auto"],
                     help="MTTKRP backend for the PARAFAC2 cells (the host "
-                         "placeholder mesh lowers pallas in interpret mode)")
+                         "placeholder mesh lowers pallas/fused in interpret "
+                         "mode)")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "f16"],
+                    help="compute precision for the PARAFAC2 cells: bf16/f16 "
+                         "stage the streamed slab operands half-width with "
+                         "f32 accumulation — halves the roofline's streamed "
+                         "bytes (repro.kernels.common)")
     ap.add_argument("--format", default="cc", choices=["cc", "scoo"],
                     help="device data format the PARAFAC2 cells lower "
                          "against: cc (densified rectangles) or scoo (the "
@@ -569,6 +600,8 @@ def main(argv=None):
                 key = (f"{cell}|als_step|{mesh_name}"
                        + (f"+{args.format}" if args.format != "cc" else "")
                        + (f"+{args.backend}" if args.backend != "jnp" else "")
+                       + (f"+{args.precision}" if args.precision != "f32"
+                          else "")
                        + (f"+{args.engine}" if args.engine != "host" else "")
                        + (f"+[{cons}]" if cons else "")
                        + (f"+[{args.compress}]" if args.compress != "none"
@@ -584,7 +617,8 @@ def main(argv=None):
                                             check_every=args.check_every,
                                             constraint=cons,
                                             format=args.format,
-                                            compress=args.compress)
+                                            compress=args.compress,
+                                            precision=args.precision)
                     results[key] = rec
                     save_results(args.out, results)
                     print(f"[dryrun] {key}: OK bottleneck={rec['bottleneck']} "

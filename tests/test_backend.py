@@ -12,10 +12,12 @@ import jax.numpy as jnp
 from repro.sparse import random_irregular, random_parafac2
 from repro.core import Parafac2Options, bucketize, fit, init_state, als_step
 from repro.core.backend import (
-    AutoBackend, BACKENDS, JnpBackend, PallasBackend, get_backend)
+    AutoBackend, BACKENDS, FusedBackend, JnpBackend, PallasBackend,
+    dispatch_tally, get_backend)
 
 JNP = get_backend("jnp")
 PAL = get_backend("pallas")
+FUSED = get_backend("fused")
 
 TOL = dict(rtol=1e-4, atol=1e-4)
 
@@ -204,3 +206,184 @@ def test_als_step_auto_backend_runs():
     s0 = init_state(bt, opts, seed=0)
     s1 = jax.jit(lambda s: als_step(bt, s, opts))(s0)
     assert np.isfinite(float(s1.fit))
+
+
+# ---------------------------------------------------------------------------
+# fused megakernel backend: stage parity, dispatch count, mixed precision
+# ---------------------------------------------------------------------------
+
+def _setup_t(dtype, **geom):
+    """Like _setup but with a selectable factor/value dtype (f64 parity)."""
+    geom = dict(geom)
+    seed, K, J, R = geom.pop("seed"), geom.pop("K"), geom.pop("J"), geom.pop("R")
+    data = random_irregular(n_subjects=K, n_cols=J, max_rows=geom.pop("max_rows", 9),
+                            avg_nnz_per_subject=18, seed=seed)
+    bt = bucketize(data, max_buckets=geom.pop("buckets", 2), dtype=dtype, **geom)
+    rng = np.random.default_rng(seed)
+    H = jnp.asarray(rng.standard_normal((R, R)), dtype)
+    V = jnp.asarray(rng.standard_normal((J, R)), dtype)
+    W = jnp.asarray(rng.standard_normal((K, R)), dtype)
+    Qs = [jnp.asarray(rng.standard_normal((b.kb, b.i_pad, R)), dtype)
+          for b in bt.buckets]
+    return bt, Qs, H, V, W
+
+
+FUSED_TOLS = {jnp.float32: dict(rtol=1e-6, atol=1e-6),
+              jnp.float64: dict(rtol=1e-12, atol=1e-12)}
+
+
+@pytest.mark.parametrize("geom", GEOMETRIES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_fused_stage_parity(geom, dtype):
+    """Every fused ALS stage must reproduce the staged (jnp) pipeline exactly
+    — f32 to 1e-6, f64 to 1e-12 — over odd/unaligned/padded geometries. The
+    fused backend carries Q (never materializing Yc), so staged stages get
+    Yc = b.project(Q) while fused stages get Q itself."""
+    bt, Qs, H, V, W = _setup_t(dtype, **geom)
+    tol = FUSED_TOLS[dtype]
+    for b, Q in zip(bt.buckets, Qs):
+        Vg = b.gather_v(V)
+        Wb = jnp.take(W, b.subject_ids, 0)
+        Yc = b.project(Q)
+        # F1: X_k V + Procrustes input B in one slab pass
+        XkV_s, B_s = JNP.procrustes_b_bucket(b, H, Wb, V, Vg)
+        XkV_f, B_f = FUSED.procrustes_b_bucket(b, H, Wb, V, Vg)
+        np.testing.assert_allclose(XkV_f, XkV_s, **tol)
+        np.testing.assert_allclose(B_f, B_s, **tol)
+        # F2: YkV-from-XkV + the M1 partial reduced in-dispatch
+        np.testing.assert_allclose(
+            FUSED.mode1_xkv_bucket(b, Q, XkV_s, Wb),
+            JNP.mode1_xkv_bucket(b, Q, XkV_s, Wb), **tol)
+        # F3: mode-2 compact directly from the slab (no Yc round-trip)
+        np.testing.assert_allclose(
+            FUSED.mode2_bucket(b, Q, H, Wb),
+            JNP.mode2_bucket(b, Yc, H, Wb), **tol)
+        # F4: G = Y_k V; mode-1/3 from it are the shared R x R algebra
+        np.testing.assert_allclose(
+            FUSED.ykv_bucket(b, Q, V), JNP.ykv_bucket(b, Yc, V), **tol)
+        np.testing.assert_allclose(
+            FUSED.mode1_bucket(b, Q, Wb, V), JNP.mode1_bucket(b, Yc, Wb, V),
+            **tol)
+        np.testing.assert_allclose(
+            FUSED.mode3_bucket(b, Q, H, V), JNP.mode3_bucket(b, Yc, H, V),
+            **tol)
+
+
+def test_fused_empty_bucket_contributes_nothing():
+    """All-padding subjects (mask 0) contribute zero through every fused
+    stage, exactly like the staged backends."""
+    bt, Qs, H, V, W = _setup_t(jnp.float32, seed=4, K=6, J=30, R=4, col_align=4)
+    b, Q = bt.buckets[0], Qs[0]
+    empty = dataclasses.replace(
+        b, subject_mask=jnp.zeros_like(b.subject_mask),
+        col_mask=jnp.zeros_like(b.col_mask))
+    Wb = jnp.take(W, empty.subject_ids, 0)
+    np.testing.assert_allclose(
+        FUSED.mode1_xkv_bucket(empty, Q, Q, Wb), np.zeros((4, 4)), atol=1e-6)
+    np.testing.assert_allclose(
+        FUSED.mode2_bucket(empty, Q, H, Wb),
+        np.zeros((empty.kb, empty.c_pad, 4)), atol=1e-6)
+    np.testing.assert_allclose(
+        FUSED.mode3_bucket(empty, Q, H, V), np.zeros((empty.kb, 4)), atol=1e-6)
+
+
+@pytest.mark.parametrize("backend,per_bucket", [
+    ("jnp", 5.0), ("pallas", 5.0), ("fused", 4.0)])
+def test_dispatch_tally_per_iteration(backend, per_bucket):
+    """The fused route must collapse the staged 5 bucket-stage dispatches per
+    ALS iteration to 4 — the exact-parity fusion floor (eigh and the H/V
+    solves are global sync points; see kernels/fused.py). Ticks fire at trace
+    time, so eval_shape counts one full als_step without running it."""
+    bt = _fit_data()
+    opts = Parafac2Options(rank=3, dtype=jnp.float32, backend=backend)
+    s0 = init_state(bt, opts, seed=0)
+    with dispatch_tally() as tally:
+        jax.eval_shape(lambda s: als_step(bt, s, opts), s0)
+    assert sum(tally.values()) / len(bt.buckets) == per_bucket
+    if backend == "fused":
+        # the separate projection dispatch is gone: Q is carried, Yc never
+        # materialized
+        assert "project" not in tally
+    else:
+        assert tally["project"] == len(bt.buckets)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "fused"])
+def test_precision_fit_parity_choa(backend):
+    """bf16/f16 compute with f32 accumulation must land within 0.1pp of the
+    f32 fit on the CHOA-like workload (rank 5, 20 iterations) — the mixed
+    precision contract that makes ``precision`` a pure performance knob."""
+    from repro.data import choa_like
+
+    data = choa_like(scale=0.001, seed=0)
+    bt = bucketize(data, max_buckets=2, dtype=jnp.float32)
+    fits = {}
+    for prec in ("f32", "bf16", "f16"):
+        opts = Parafac2Options(rank=5, dtype=jnp.float32, backend=backend,
+                               precision=prec)
+        _, hist = fit(bt, opts, max_iters=20, tol=0.0, seed=0)
+        assert np.isfinite(hist).all()
+        fits[prec] = float(hist[-1])
+    assert abs(fits["bf16"] - fits["f32"]) < 1e-3, fits
+    assert abs(fits["f16"] - fits["f32"]) < 1e-3, fits
+
+
+def test_precision_option_validation():
+    with pytest.raises(ValueError, match="precision"):
+        Parafac2Options(rank=3, precision="f8")
+    with pytest.raises(ValueError, match="precision"):
+        Parafac2Options(rank=3, precision="bf16", dtype=jnp.float64)
+    # f64 data keeps the f64 accumulator: precision="f32" is the identity
+    Parafac2Options(rank=3, precision="f32", dtype=jnp.float64)
+
+
+def test_get_backend_precision_instances():
+    """get_backend(name, precision) returns configured, cached instances;
+    the f32 default stays the shared singleton."""
+    assert get_backend("fused") is BACKENDS["fused"]
+    assert isinstance(get_backend("fused"), FusedBackend)
+    be = get_backend("jnp", "bf16")
+    assert isinstance(be, JnpBackend) and be.precision == "bf16"
+    assert get_backend("jnp", "bf16") is be          # cached
+    assert get_backend("jnp", "f32") is BACKENDS["jnp"]
+    assert get_backend("fused", "f16").precision == "f16"
+    with pytest.raises(ValueError):
+        JnpBackend(precision="int8")
+
+
+def test_auto_fused_routing(monkeypatch):
+    """AutoBackend's _fused_ok predicate: fused only on TPU, CC buckets,
+    sub-f64 dtype, and kernel-aligned (R % 8, C_pad % 128) geometry."""
+    import repro.core.backend as backend_mod
+
+    auto = AutoBackend()
+    bt_al, _, H, V, W = _setup(seed=1, K=9, J=200, R=8, col_align=128)
+    b_al = bt_al.buckets[0]
+    bt_odd, _, *_ = _setup(seed=0, K=13, J=37, R=5, col_align=4)
+    b_odd = bt_odd.buckets[0]
+    # off-TPU: never fused (interpret-mode DMA emulation is not a win)
+    assert not auto._fused_ok(b_al, 8)
+    monkeypatch.setattr(backend_mod.jax, "default_backend", lambda: "tpu")
+    assert auto._fused_ok(b_al, 8)
+    assert not auto._fused_ok(b_al, 5)       # odd rank
+    assert not auto._fused_ok(b_odd, 8)      # C_pad not lane-aligned
+    bt64 = bucketize(random_irregular(n_subjects=9, n_cols=200, max_rows=9,
+                                      avg_nnz_per_subject=18, seed=1),
+                     max_buckets=2, dtype=jnp.float64, col_align=128)
+    assert not auto._fused_ok(bt64.buckets[0], 8)   # f64 stays staged
+
+
+@pytest.mark.parametrize("engine", ["host", "scan"])
+def test_fused_fit_matches_staged_trajectory(engine):
+    """End-to-end: the fused backend's fit trajectory tracks jnp under both
+    the host and the device-resident scan engines."""
+    bt = _fit_data()
+    hists = {}
+    for backend in ("jnp", "fused"):
+        opts = Parafac2Options(rank=3, dtype=jnp.float32, backend=backend,
+                               engine=engine, check_every=5)
+        _, hist = fit(bt, opts, max_iters=5, tol=0.0, seed=0)
+        assert np.isfinite(hist).all()
+        hists[backend] = np.asarray(hist)
+    np.testing.assert_allclose(hists["fused"], hists["jnp"],
+                               rtol=2e-3, atol=2e-3)
