@@ -164,6 +164,18 @@ def main(argv=None):
                          "the grid times the CORE ALS; rows get a "
                          "'/<preprocess>' suffix and a gated "
                          "speedup_vs_uncompressed_per_iter ratio")
+    ap.add_argument("--supervised-namespace", action="store_true",
+                    help="additionally run the als_supervised grid: the bare "
+                         "chunked scan loop vs a faultless supervised_fit "
+                         "(repro.dist.supervisor) on the first dataset, "
+                         "interleaved repeats — rows als_supervised/<ds>/bare "
+                         "and /supervised with the paired "
+                         "overhead_vs_bare_per_iter ratio")
+    ap.add_argument("--overhead-gate", type=float, default=0.0,
+                    help="with --supervised-namespace: fail (exit 1) if the "
+                         "median paired supervised/bare s/iter ratio exceeds "
+                         "this (e.g. 1.05 = supervisor overhead must stay "
+                         "within 5%%); 0 disables the gate")
     ap.add_argument("--xl-probe", action="store_true",
                     help="run the 'larger instance' demo: a geometry whose "
                          "densified CC buffer exceeds memory, fit under SCOO "
@@ -327,6 +339,11 @@ def main(argv=None):
     if args.fused_namespace:
         results.update(_fused_cases(args))
 
+    overhead = None
+    if args.supervised_namespace:
+        rows, overhead = _supervised_cases(args)
+        results.update(rows)
+
     if args.xl_probe:
         results["xl"] = _xl_probe(args)
 
@@ -336,6 +353,11 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1)
+
+    if args.overhead_gate and overhead is not None and overhead > args.overhead_gate:
+        raise SystemExit(
+            f"FAIL: supervisor overhead {overhead:.3f}x exceeds the "
+            f"--overhead-gate {args.overhead_gate:.2f}x budget")
     return results
 
 
@@ -386,6 +408,70 @@ def _fused_cases(args) -> dict:
              per_iter, f"fit={case['final_fit']:.4f} {rel}".strip())
         out[f"als_fused/{ds}/{case['backend']}/{case['precision']}"] = rec
     return out
+
+
+def _supervised_cases(args):
+    """The ``als_supervised`` namespace: the chunked scan loop bare
+    (``_make_runner``'s exact pattern) vs wrapped in a FAULTLESS
+    ``repro.dist.supervisor.supervised_fit`` — identical data, init state and
+    chunk lengths, the compiled chunk shared through the supervisor's
+    ``chunk_cache`` seam so both sides time steady-state dispatches only.
+    What remains is the supervisor's per-chunk host cost (health sentinel,
+    watchdog, snapshot bookkeeping), the price of turning fault tolerance on;
+    the paired median ratio is what ``--overhead-gate`` holds to budget.
+    Returns ``(rows, median supervised/bare ratio)``."""
+    from repro.dist.supervisor import SupervisorConfig, supervised_fit
+
+    ds = [s.strip() for s in args.datasets.split(",") if s.strip()][0]
+    data = _load(ds, args.scale, args.seed)
+    bt = bucketize(data, max_buckets=4, dtype=jnp.float32)
+    opts = Parafac2Options(rank=args.rank,
+                           constraints=CONSTRAINT_CASES["nonneg"],
+                           engine="scan", check_every=args.check_every)
+    state0 = init_state(bt, opts, seed=0)   # _make_runner's init, shared
+    bare = _make_runner(bt, opts, args.iters)
+    cache = {}
+
+    def supervised():
+        cfg = SupervisorConfig(chunk_cache=cache)
+        _, hist, _ = supervised_fit(bt, opts, max_iters=args.iters, tol=0.0,
+                                    state=state0, config=cfg)
+        return hist[-1]
+
+    fits, ratios = {}, []
+    times = {"bare": [], "supervised": []}
+    for name, run in (("bare", bare), ("supervised", supervised)):
+        for _ in range(2):   # compile + warm
+            fits[name] = run()
+    for _ in range(args.repeats):
+        round_t = {}
+        for name, run in (("bare", bare), ("supervised", supervised)):
+            t0 = time.perf_counter()
+            fits[name] = run()
+            round_t[name] = time.perf_counter() - t0
+            times[name].append(round_t[name])
+        ratios.append(round_t["supervised"] / round_t["bare"])
+    overhead = sorted(ratios)[len(ratios) // 2]
+
+    out = {}
+    for name in ("bare", "supervised"):
+        ts = sorted(times[name])
+        per_iter = ts[len(ts) // 2] / args.iters
+        rec = {"seconds_per_iter": per_iter, "final_fit": fits[name],
+               "iters": args.iters, "n_subjects": data.n_subjects,
+               "nnz": data.nnz}
+        rel = ""
+        if name == "supervised":
+            rec["overhead_vs_bare_per_iter"] = overhead
+            rel = f"overhead_vs_bare={overhead:.3f}x"
+        emit(f"als_supervised/{ds}/{name}", per_iter,
+             f"fit={fits[name]:.4f} {rel}".strip())
+        out[f"als_supervised/{ds}/{name}"] = rec
+    # the supervisor must not change the answer, only survive faults: a
+    # faultless wrapped run is bitwise the bare chunk loop
+    assert fits["supervised"] == fits["bare"], (
+        fits["supervised"], fits["bare"])
+    return out, overhead
 
 
 def _xl_probe(args) -> dict:

@@ -82,6 +82,13 @@ class Parafac2Options:
     # inner AO-ADMM iterations per factor update (admm-routed constraints;
     # warm-started duals make a handful sufficient — COPA §3)
     admm_iters: int = 10
+    # Tikhonov damping added to every factor update's R x R Gram
+    # (A + ridge*I). 0.0 — the default — is a STATIC no-op: the term is
+    # gated at trace time, so the emitted HLO (and therefore the fit
+    # trajectory) is bitwise the historical one. The fault supervisor
+    # (repro.dist.supervisor) raises it on its tightened-regularization
+    # retry after repeated numerical-health rollbacks.
+    ridge: float = 0.0
     dtype: Any = jnp.float32
     # MTTKRP compute backend: "jnp" (pure-jnp spartan math, exact reference),
     # "pallas" (TPU kernels; interpret-mode emulation off-TPU), "scoo" (the
@@ -131,6 +138,8 @@ class Parafac2Options:
         # fail fast on a bad preprocessing spec (ValueError listing the
         # registered preprocessors), exactly like constraint specs do
         _compress.parse_preprocess_spec(self.compress)
+        if self.ridge < 0.0:
+            raise ValueError(f"ridge must be >= 0, got {self.ridge}")
         from repro.kernels.common import PRECISIONS
         if self.precision not in PRECISIONS:
             raise ValueError(
@@ -219,6 +228,15 @@ def w_global(data: Bucketed, W) -> jnp.ndarray:
     return out
 
 
+def _ridged(A: jax.Array, opts: Parafac2Options) -> jax.Array:
+    """A + ridge*I on an R x R Gram; trace-time no-op at ridge == 0 (the
+    default emits the identical HLO — bitwise-safe)."""
+    if opts.ridge:
+        return A + jnp.asarray(opts.ridge, A.dtype) * jnp.eye(
+            A.shape[-1], dtype=A.dtype)
+    return A
+
+
 def _procrustes_project(
     b: Bucket, H: jax.Array, V: jax.Array, W: jax.Array, opts: Parafac2Options,
     i: int = 0, be: Optional[MttkrpBackend] = None,
@@ -283,8 +301,8 @@ def als_step(
         else:
             M1 = M1 + be.mode1_bucket(b, proj, Wb, V)
     M1 = psum_subjects(M1)
-    H_new, aux_h = cons["h"].update(M1, _w_gram(W) * (V.T @ V), H, aux["h"],
-                                    **solve_kw)
+    H_new, aux_h = cons["h"].update(M1, _ridged(_w_gram(W) * (V.T @ V), opts),
+                                    H, aux["h"], **solve_kw)
     aux_w = aux["w"]
     if not cons["h"].penalized:
         # absorb scale into W (model-invariant for indicator constraints;
@@ -301,8 +319,9 @@ def als_step(
         A = be.mode2_bucket(b, proj, H_new, Wb)
         M2 = M2 + be.mode2_scatter(A, b.cols, J).astype(M2.dtype)
     M2 = psum_subjects(M2)
-    V_new, aux_v = cons["v"].update(M2, _w_gram(W) * (H_new.T @ H_new), V,
-                                    aux["v"], **solve_kw)
+    V_new, aux_v = cons["v"].update(
+        M2, _ridged(_w_gram(W) * (H_new.T @ H_new), opts), V,
+        aux["v"], **solve_kw)
     if not cons["v"].penalized:
         V_new, v_norms = normalize_columns(V_new)
         aux_v = cst.scale_aux(aux_v, 1.0 / jnp.maximum(v_norms, 1e-12))
@@ -311,7 +330,7 @@ def als_step(
 
     # ---- 3c: W update (mode-3 MTTKRP) --------------------------------------
     VtV = V_new.T @ V_new
-    gram3 = VtV * (H_new.T @ H_new)
+    gram3 = _ridged(VtV * (H_new.T @ H_new), opts)
     rows_per_bucket = []
     Gs = []   # G_k = Y_k V_new per bucket, shared with the fit computation
     for b, (proj, _, _) in zip(data.buckets, per_bucket):

@@ -9,6 +9,10 @@ Two modules:
   the dry-run's roofline probes.
 * :mod:`repro.dist.fault` — fault injection, transient-fault retries, and a
   straggler watchdog for resilient long ALS / training runs.
+* :mod:`repro.dist.supervisor` — the fault-tolerant supervisor wrapping the
+  chunked ALS engines (retry -> checkpoint-restore -> health rollback).
+  Imported lazily below: it pulls in :mod:`repro.core.engine`, while
+  :mod:`repro.core` imports this package at module scope.
 
 The SPARTan story (see ``docs/ARCHITECTURE.md``): subjects shard subject-wide
 over EVERY mesh axis (the decomposition has no tensor-parallel dimension, so
@@ -62,4 +66,17 @@ __all__ = [
     "StepWatchdog",
     "TransientFault",
     "run_with_retries",
+    "SupervisorConfig",
+    "SupervisorReport",
+    "supervised_fit",
 ]
+
+_LAZY = {"SupervisorConfig", "SupervisorReport", "supervised_fit"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.dist import supervisor as _sup
+
+        return getattr(_sup, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -17,6 +17,21 @@ iteration count from data size); ``--json`` writes the machine-readable run
 summary CI and the benchmarks consume (the unified ``schema_version`` +
 ``resolved_options`` layout of repro.launch.summary), including the resolved
 constraint/compress blocks and the per-bucket format/density decisions.
+
+Fault tolerance (repro.dist.supervisor; scan/mesh engines): ``--ckpt-dir``
+checkpoints every ``--ckpt-every`` chunks and ``--resume`` continues from
+the newest one (restore-then-continue is bitwise under scan).
+``--fail-at "1,3:5"`` injects transient faults at chunk boundaries (an
+optional ``:times`` > ``--max-retries`` exhausts the in-place retries and
+forces the checkpoint-restore path); ``--nan-at`` poisons a chunk's state
+with NaNs so the numerical-health sentinel rolls back. A faulted run
+re-converges to the SAME factors as an unfaulted one, and the
+retry/restore/rollback counts land in the ``--json`` summary's
+``supervisor`` block. ``--supervise`` engages the supervisor without any
+faults (e.g. for checkpoint cadence alone). Under ``--engine mesh`` the
+bucket plan is additionally nnz-BALANCED across the subject shards
+(BucketPlan.balance_for_shards — equal nonzeros per shard, not equal
+subjects), with the per-shard nnz and the residual imbalance reported.
 """
 from __future__ import annotations
 
@@ -34,8 +49,32 @@ from repro.core.constraints import (
     available as available_constraints, constraint_summary, parse_constraint_arg)
 from repro.core.interpret import subject_top_phenotypes, top_phenotype_features
 from repro.data import choa_like, movielens_like
+from repro.dist.fault import FaultInjector
+from repro.dist.supervisor import SupervisorConfig, supervised_fit
 from repro.launch.summary import resolved_options, run_summary
 from repro.sparse import plan_buckets, random_irregular, route_formats
+
+
+def parse_fail_spec(spec: str) -> dict:
+    """``"1,3:5"`` -> ``{1: 1, 3: 5}``: comma-separated chunk indices, each
+    with an optional ``:times`` count (how many attempts fault before the
+    injected failure clears — times > --max-retries forces a restore)."""
+    out = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            if ":" in part:
+                step, times = part.split(":", 1)
+                out[int(step)] = int(times)
+            else:
+                out[int(part)] = 1
+        except ValueError:
+            raise ValueError(
+                f"bad fault spec {part!r} (want CHUNK or CHUNK:TIMES, "
+                f"e.g. '1,3:5')") from None
+    return out
 
 
 def load_dataset(name: str, scale: float, seed: int):
@@ -97,7 +136,48 @@ def main(argv=None) -> dict:
                     help="write the machine-readable run summary to PATH")
     ap.add_argument("--buckets", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    # --- fault-tolerant supervisor (repro.dist.supervisor) -----------------
+    ap.add_argument("--supervise", action="store_true",
+                    help="run the fit under the fault-tolerant supervisor "
+                         "even without faults/checkpointing (scan/mesh only; "
+                         "faultless supervised runs are bitwise the bare fit "
+                         "under scan)")
+    ap.add_argument("--ckpt-dir", default="", metavar="DIR",
+                    help="checkpoint directory: write elastic checkpoints "
+                         "every --ckpt-every chunks (repro.checkpoint)")
+    ap.add_argument("--ckpt-every", type=int, default=1, metavar="N",
+                    help="chunks between checkpoint writes (with --ckpt-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint in --ckpt-dir "
+                         "(restore-then-continue is bitwise under scan)")
+    ap.add_argument("--fail-at", default="", metavar="SPEC",
+                    help="inject transient faults at these chunk boundaries: "
+                         "'1,3:5' = a blip at chunk 1, a 5-times fault at "
+                         "chunk 3 (times > --max-retries forces the "
+                         "checkpoint-restore path)")
+    ap.add_argument("--nan-at", default="", metavar="SPEC",
+                    help="poison the state with NaNs at these chunk "
+                         "boundaries (same SPEC syntax as --fail-at); the "
+                         "health sentinel rolls back to the last good "
+                         "checkpoint")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="in-place retries per chunk before escalating to "
+                         "checkpoint-restore")
+    ap.add_argument("--backoff", type=float, default=0.0,
+                    help="base retry backoff seconds (exponential, "
+                         "deterministic seeded jitter — repro.dist.fault)")
     args = ap.parse_args(argv)
+
+    fail_spec = parse_fail_spec(args.fail_at)
+    nan_spec = parse_fail_spec(args.nan_at)
+    supervise = (args.supervise or bool(args.ckpt_dir) or args.resume
+                 or bool(fail_spec) or bool(nan_spec))
+    if supervise and args.engine not in ("scan", "mesh"):
+        raise SystemExit(
+            "--supervise/--ckpt-dir/--resume/--fail-at/--nan-at need the "
+            "chunked device engines: pass --engine scan or --engine mesh")
+    if args.resume and not args.ckpt_dir:
+        raise SystemExit("--resume needs --ckpt-dir")
 
     if args.constraint:
         # raises ValueError listing the registered constraints on a bad spec
@@ -116,6 +196,24 @@ def main(argv=None) -> dict:
     rc, ccnt, nnzc = data.row_counts(), data.col_counts(), data.nnz_counts()
     plan = plan_buckets(rc, ccnt, max_buckets=args.buckets, nnz_counts=nnzc,
                         sort_by="nnz" if args.format == "scoo" else "area")
+    shard_balance = None
+    if args.engine == "mesh" and subject_align > 1:
+        # nnz-balance the subject shards: equal nonzeros per contiguous
+        # shard chunk, not equal subject counts — the quantile planner sorts
+        # members by size, which would put every heavy subject on the last
+        # shard (the straggler the watchdog would then flag forever)
+        naive = plan.shard_imbalance(nnzc, subject_align)
+        plan = plan.balance_for_shards(nnzc, subject_align)
+        shard_balance = {
+            "n_shards": subject_align,
+            "shard_nnz": plan.shard_nnz(nnzc, subject_align),
+            "imbalance_max_over_mean": plan.shard_imbalance(
+                nnzc, subject_align),
+            "imbalance_unbalanced": naive,
+        }
+        print(f"[shard-balance] {subject_align} shards: imbalance "
+              f"{naive:.3f} -> "
+              f"{shard_balance['imbalance_max_over_mean']:.3f} (max/mean nnz)")
     fmts = route_formats(plan, nnzc, format=args.format)
     bt = bucketize(data, dtype=jnp.float32, subject_align=subject_align,
                    plan=plan, formats=fmts)
@@ -136,8 +234,26 @@ def main(argv=None) -> dict:
                            engine=args.engine, check_every=args.check_every,
                            compress=args.compress)
     t0 = time.perf_counter()
-    state, hist = fit(bt, opts, max_iters=args.iters, tol=args.tol,
-                      seed=args.seed, verbose=True)
+    supervisor_report = None
+    if supervise:
+        injector = (FaultInjector(fail_spec, nan_steps=nan_spec)
+                    if (fail_spec or nan_spec) else None)
+        cfg = SupervisorConfig(
+            max_retries=args.max_retries, backoff=args.backoff,
+            jitter=0.1 if args.backoff else 0.0,
+            ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
+            resume=args.resume, injector=injector)
+        state, hist, report = supervised_fit(
+            bt, opts, max_iters=args.iters, tol=args.tol, seed=args.seed,
+            verbose=True, config=cfg)
+        supervisor_report = report.as_dict()
+        print(f"[supervisor] retries={report.retries} "
+              f"restores={report.restores} rollbacks={report.rollbacks} "
+              f"stragglers={len(report.stragglers)} "
+              f"checkpoints={report.checkpoints_written}")
+    else:
+        state, hist = fit(bt, opts, max_iters=args.iters, tol=args.tol,
+                          seed=args.seed, verbose=True)
     dt = time.perf_counter() - t0
     print(f"[fit] {len(hist)} iters in {dt:.1f}s "
           f"({dt/max(len(hist),1):.2f}s/iter), fit={hist[-1]:.4f}")
@@ -172,6 +288,11 @@ def main(argv=None) -> dict:
         iters=len(hist), seconds_total=dt,
         seconds_per_iter=dt / max(len(hist), 1),
         platform=jax.default_backend(),
+        # fault-tolerance observability: retry/restore/rollback/straggler
+        # counts (None when the supervisor was not engaged) + the mesh
+        # engine's per-shard nnz balance
+        supervisor=supervisor_report,
+        shard_balance=shard_balance,
     )
     if args.json:
         with open(args.json, "w") as f:

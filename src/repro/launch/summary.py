@@ -14,7 +14,13 @@ Every driver summary now goes through :func:`run_summary`, which stamps
   rather than re-deriving defaults from CLI flags.
 
 Driver-specific payload keys stay at the top level (the historical layout
-tests and benchmarks consume); the schema block is additive.
+tests and benchmarks consume); the schema block is additive. Notable
+decompose additions: ``supervisor`` — the fault-tolerant fit's
+:class:`repro.dist.supervisor.SupervisorReport` as a dict
+(retry/restore/rollback counts, straggler chunk ids, checkpoints written,
+resume step, final ridge) or ``None`` for a bare fit — and
+``shard_balance`` — the nnz-balanced shard planner's before/after
+max-over-mean imbalance under ``engine="mesh"`` or ``None``.
 """
 from __future__ import annotations
 

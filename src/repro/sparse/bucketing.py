@@ -35,6 +35,16 @@ import numpy as np
 __all__ = ["BucketPlan", "fixed_plan", "plan_buckets", "route_formats",
            "SCOO_DENSITY_THRESHOLD"]
 
+
+def _shard_capacities(n_members: int, n_shards: int) -> List[int]:
+    """Real-subject slots per shard under ``bucketize``'s layout: the bucket
+    pads Kb up to a multiple of `n_shards` with padding slots at the TAIL,
+    and shard s then owns the contiguous slots [s*cs, (s+1)*cs). Shards
+    0..n-2 therefore hold exactly ``cs`` real subjects; the LAST shard
+    absorbs all the padding."""
+    cs = -(-n_members // n_shards)            # ceil -> padded Kb / n_shards
+    return [max(0, min(cs, n_members - s * cs)) for s in range(n_shards)]
+
 # Density below which the SCOO format wins over CC for a bucket: one SCOO
 # nonzero costs ~3 staged entries (val + row + col) and ~2 gathers per
 # contraction vs CC's 1 dense cell, so the crossover is well above 10%;
@@ -98,6 +108,75 @@ class BucketPlan:
         total = sum(npad * len(mem)
                     for npad, mem in zip(self.nnz_pads, self.members))
         return 1.0 - used / max(total, 1)
+
+    # -- nnz-balanced sharding (the mesh engine's straggler planner) --------
+    def balance_for_shards(self, nnz_counts: Sequence[int],
+                           n_shards: int) -> "BucketPlan":
+        """Reorder every bucket's members so the `n_shards` contiguous
+        subject shards carry (near-)equal NONZERO counts, not equal subject
+        counts.
+
+        Under ``engine="mesh"`` each bucket's leading axis splits into
+        `n_shards` contiguous chunks (``bucketize(subject_align=n_shards)``
+        pads at the tail — see :func:`_shard_capacities`); with quantile
+        bucketing the members arrive sorted by size, so naive order puts all
+        the heavy subjects on the last shards and the per-chunk SCOO work
+        (O(bucket nnz / n_shards) only if balanced) stragglers. This is
+        capacity-constrained greedy LPT: walk subjects by nnz descending,
+        assign each to the least-loaded shard with a free slot (ties -> the
+        lowest shard index, so the result is deterministic). The short
+        final shard (the one holding the padding) gets the fewest slots.
+
+        Shapes and pad targets are untouched — only the order WITHIN each
+        bucket changes, so the padded geometry (and therefore the compiled
+        program) is identical; only the subject->slot assignment moves.
+        """
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        nz = np.asarray(nnz_counts, dtype=np.int64)
+        if n_shards == 1:
+            return self
+        new_members = []
+        for mem in self.members:
+            caps = _shard_capacities(len(mem), n_shards)
+            loads = [0] * n_shards
+            bins: List[list] = [[] for _ in range(n_shards)]
+            # stable sort on -nnz: equal-nnz subjects keep member order
+            order = mem[np.argsort(-nz[mem], kind="stable")]
+            for k in order:
+                s = min((s for s in range(n_shards) if len(bins[s]) < caps[s]),
+                        key=lambda s: (loads[s], s))
+                bins[s].append(k)
+                loads[s] += int(nz[k])
+            new_members.append(
+                np.concatenate([np.asarray(b, dtype=np.int32) for b in bins
+                                if b]) if len(mem) else mem)
+        return dataclasses.replace(self, members=new_members)
+
+    def shard_nnz(self, nnz_counts: Sequence[int],
+                  n_shards: int) -> List[List[int]]:
+        """Per-bucket per-shard true nonzero counts under the contiguous
+        chunk layout (tail padding) — the balance the planner above
+        optimizes, surfaced so drivers can report it."""
+        nz = np.asarray(nnz_counts, dtype=np.int64)
+        out = []
+        for mem in self.members:
+            caps = _shard_capacities(len(mem), n_shards)
+            loads, lo = [], 0
+            for c in caps:
+                loads.append(int(nz[mem[lo:lo + c]].sum()))
+                lo += c
+            out.append(loads)
+        return out
+
+    def shard_imbalance(self, nnz_counts: Sequence[int],
+                        n_shards: int) -> float:
+        """max/mean per-shard nnz over all buckets combined (1.0 = perfectly
+        balanced; the straggler factor an unbalanced plan pays)."""
+        per_bucket = self.shard_nnz(nnz_counts, n_shards)
+        totals = [sum(b[s] for b in per_bucket) for s in range(n_shards)]
+        mean = sum(totals) / max(len(totals), 1)
+        return max(totals) / mean if mean > 0 else 1.0
 
     def stats(self, row_counts: Sequence[int], col_counts: Sequence[int],
               nnz_counts: Sequence[int],
